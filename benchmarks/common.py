@@ -1,0 +1,91 @@
+"""Shared benchmark utilities: timing + a cached small trained model used by
+the accuracy-reproduction benchmarks (Tables 2/3/5, Fig. 6).
+
+No ImageNet/CIFAR is available offline (see DESIGN.md §6), so accuracy
+benchmarks reproduce the paper's *orderings and deltas* on a deterministic
+synthetic next-token task that a small LM learns well — the quantization
+math (what the paper's tables measure) is exercised identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig, QuantPolicy
+from repro.core.swis import QuantConfig
+from repro.data import SyntheticPipeline
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.train.loop import Trainer
+
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+
+def time_us(fn: Callable, *args, n: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") else None
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+        else:
+            jax.tree.map(lambda x: getattr(x, "block_until_ready", lambda: x)(),
+                         r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+_MODEL_CACHE: dict = {}
+
+
+def trained_smoke_model(steps: int = 400, seq: int = 64, batch: int = 16):
+    """Train (or load) the benchmark model: smollm-smoke on the synthetic
+    affine-recurrence LM task. Returns (cfg, params, eval_fn)."""
+    key = (steps, seq, batch)
+    if key in _MODEL_CACHE:
+        return _MODEL_CACHE[key]
+    cfg = C.get_smoke("smollm-135m").replace(compute_dtype="float32")
+    workdir = os.path.join(BENCH_DIR, f"model_{steps}_{seq}_{batch}")
+    tr = Trainer(cfg, seq_len=seq, global_batch=batch, workdir=workdir,
+                 total_steps=steps, ckpt_every=steps, warmup=20,
+                 peak_lr=5e-3)
+    out = tr.run(steps)
+    params = out["state"].params
+
+    model = Model(cfg)
+    pipe = SyntheticPipeline(cfg, seq, batch, seed=0)
+
+    def eval_acc(eval_cfg: ArchConfig, eval_params=None, n_batches: int = 4
+                 ) -> float:
+        m = Model(eval_cfg)
+        p = eval_params if eval_params is not None else params
+        accs = []
+        for i in range(n_batches):
+            b = jax.tree.map(jnp.asarray, pipe.batch_at(100000 + i))
+            _, metrics = m.loss(p, b)
+            accs.append(float(metrics["accuracy"]))
+        return float(np.mean(accs))
+
+    _MODEL_CACHE[key] = (cfg, params, eval_acc)
+    return _MODEL_CACHE[key]
+
+
+def quant_policy(method: str, n_shifts: float, *, ds: bool = False,
+                 schedule: bool = True, group: int = 4,
+                 act_shifts: int = 0) -> QuantPolicy:
+    if method == "act_trunc":
+        return QuantPolicy(cfg=QuantConfig(method="none"), mode="off",
+                           act_shifts=act_shifts or int(n_shifts))
+    return QuantPolicy(
+        cfg=QuantConfig(method=method, n_shifts=n_shifts, group_size=group,
+                        double_shift=ds, schedule=schedule),
+        mode="ptq")

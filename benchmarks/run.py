@@ -1,0 +1,25 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import paper_tables
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for fn in paper_tables.ALL:
+        if only and only not in fn.__name__:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            print(f"{fn.__name__},0.0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serve a small model with SWIS-compressed (bit-plane packed) weights and
+batched requests: prefill + greedy decode through the ring KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_swis.py [--batch 4 --tokens 16]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.core.swis import QuantConfig
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import DecodeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--n-shifts", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = C.get_smoke(args.arch).replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+
+    qcfg = QuantConfig(method="swis", n_shifts=args.n_shifts, group_size=4)
+    dense = DecodeEngine(cfg, params, max_len=64, batch=args.batch)
+    packed = DecodeEngine(cfg, params, max_len=64, batch=args.batch,
+                          packed=True, quant_cfg=qcfg)
+    print(f"packed {packed.pack_stats['n_packed']} GEMM weights, "
+          f"compression {packed.pack_stats['compression']:.2f}x "
+          f"(N={args.n_shifts} shifts, group 4)")
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, (args.batch, 8)).astype(np.int32)
+    out_d = dense.generate(prompt, args.tokens)
+    out_p = packed.generate(prompt, args.tokens)
+    agree = float((out_d == out_p).mean())
+    print(f"generated {args.tokens} tokens x {args.batch} requests; "
+          f"dense-vs-packed token agreement: {agree:.2f}")
+    print("packed sample:", out_p[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

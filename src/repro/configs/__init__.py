@@ -1,0 +1,41 @@
+"""Assigned-architecture registry: ``get_config('<arch-id>')`` returns the
+exact published config; ``get_smoke('<arch-id>')`` the reduced same-family
+smoke config. Arch ids use dashes (CLI form): e.g. ``--arch qwen2-moe-a2.7b``.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ArchConfig, GriffinConfig, Mamba2Config,
+                                MoEConfig, ParallelConfig, QuantPolicy,
+                                ShapeConfig, SHAPES, VLMConfig,
+                                shape_applicable)
+
+_MODULES = {
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "dbrx-132b": "dbrx_132b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "mistral-large-123b": "mistral_large_123b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "smollm-135m": "smollm_135m",
+    "deepseek-7b": "deepseek_7b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str) -> ArchConfig:
+    return _module(arch_id).SMOKE

@@ -1,0 +1,12 @@
+"""SWIS core: quantization, selection, scheduling, packing (the paper's
+primary contribution, in JAX)."""
+from repro.core.swis import QuantConfig, QuantizedWeight, quantize, fake_quant, act_truncate, rmse
+from repro.core.packing import PackedWeight, pack, unpack_dense, compression_ratio
+from repro.core.qat import ste_quant, maybe_quant
+from repro.core import probability, selection, scheduling
+
+__all__ = [
+    "QuantConfig", "QuantizedWeight", "quantize", "fake_quant", "act_truncate",
+    "rmse", "PackedWeight", "pack", "unpack_dense", "compression_ratio",
+    "ste_quant", "maybe_quant", "probability", "selection", "scheduling",
+]

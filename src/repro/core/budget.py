@@ -1,0 +1,188 @@
+"""Cross-layer shift-budget allocation (beyond-paper extension of §4.3).
+
+The paper schedules shift counts across *filters within one layer*. The same
+marginal-cost greedy extends across *layers*: under a global parameter-
+weighted average-shift budget, layers that are cheap to demote (low weight-
+space MSE++ increase per saved bit) give up shifts so sensitive layers keep
+them. This is the knapsack-greedy on marginal returns:
+
+  1. profile: for every eligible GEMM weight, weight-space MSE++ at each
+     candidate shift count (scale^2 folds the int-domain cost back to
+     weight space so layers are comparable);
+  2. allocate: start every tensor at max(levels); repeatedly demote the
+     tensor with the smallest  d(cost) / d(bits saved)  until the
+     parameter-weighted average hits the target;
+  3. apply: per-tensor QuantConfig overrides (PTQ or QAT).
+
+Used by ``benchmarks/paper_tables.py::beyond_budget`` which shows the
+allocated network beating uniform allocation at iso-budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.swis import QuantConfig, _column_costs, _to_int_domain, fake_quant
+
+
+_NAMES = ("w", "wi", "wo", "wg", "shared_wi", "shared_wo", "shared_wg")
+
+
+def _budget_eligible(path, arr) -> bool:
+    # fake-quant pads K, so (unlike bit-plane packing) no K%32 constraint
+    if len(arr.shape) < 2 or str(path[-1]) not in _NAMES:
+        return False
+    joined = "/".join(str(p) for p in path)
+    return not ("embed" in joined or "router" in joined
+                or "frontend" in joined)
+
+
+def _eligible_leaves(params) -> List[Tuple[Tuple[str, ...], jnp.ndarray]]:
+    out = []
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(path + (k,), v)
+            return
+        if _budget_eligible(path, node):
+            out.append((path, node))
+
+    walk((), params)
+    return out
+
+
+def sensitivity_profile(
+    params,
+    qcfg: QuantConfig,
+    levels: Sequence[int] = (1, 2, 3, 4, 5),
+) -> Dict[Tuple, Dict[int, float]]:
+    """Weight-space MSE++ at each shift count, per allocation unit.
+
+    Stacked leaves (scan-over-layers: (L, K, C) / (L, E, K, C)) are
+    unstacked so every layer (and expert) gets its own unit — the
+    cross-layer analogue of the paper's per-filter granularity.
+    """
+    profile: Dict[Tuple, Dict[int, float]] = {}
+    for path, w in _eligible_leaves(params):
+        w = jnp.asarray(w, jnp.float32)
+        units = ([(path, w)] if w.ndim == 2 else
+                 [(path + (i,), w.reshape(-1, *w.shape[-2:])[i])
+                  for i in range(int(np.prod(w.shape[:-2])))])
+        for upath, w2 in units:
+            k = w2.shape[0]
+            if k % qcfg.group_size:
+                pad = (-k) % qcfg.group_size
+                w2 = jnp.pad(w2, ((0, pad), (0, 0)))
+            mags, signs, scale = _to_int_domain(w2, qcfg.bits,
+                                                qcfg.per_channel)
+            costs = {}
+            for n in levels:
+                _, col_cost = _column_costs(mags, signs, n, qcfg)
+                costs[n] = float(jnp.sum(col_cost)) * float(
+                    jnp.mean(scale)) ** 2
+            profile[upath] = costs
+    return profile
+
+
+@dataclasses.dataclass
+class BudgetAllocation:
+    shifts: Dict[Tuple[str, ...], int]
+    effective_shifts: float
+    total_cost: float
+
+
+def allocate(
+    profile: Dict[Tuple[str, ...], Dict[int, float]],
+    sizes: Dict[Tuple[str, ...], int],
+    target_avg: float,
+    levels: Sequence[int] = (1, 2, 3, 4, 5),
+) -> BudgetAllocation:
+    """Greedy marginal-cost demotion to a parameter-weighted average."""
+    levels = sorted(levels)
+    hi = levels[-1]
+    cur = {p: hi for p in profile}
+    total_params = sum(sizes[p] for p in profile)
+    budget_bits = target_avg * total_params
+
+    def bits(assign):
+        return sum(assign[p] * sizes[p] for p in profile)
+
+    # heap of (marginal cost per saved bit, path)
+    def push(heap, p):
+        n = cur[p]
+        idx = levels.index(n)
+        if idx == 0:
+            return
+        lo = levels[idx - 1]
+        d_cost = profile[p][lo] - profile[p][n]
+        d_bits = (n - lo) * sizes[p]
+        heapq.heappush(heap, (d_cost / max(d_bits, 1), p, n))
+
+    heap: list = []
+    for p in profile:
+        push(heap, p)
+    while bits(cur) > budget_bits and heap:
+        _, p, n_at_push = heapq.heappop(heap)
+        if cur[p] != n_at_push:
+            continue  # stale entry
+        idx = levels.index(cur[p])
+        if idx == 0:
+            continue
+        lo = levels[idx - 1]
+        # no-overshoot: accept a budget-crossing demotion only if it lands
+        # closer to the target than staying put
+        before = bits(cur)
+        after = before - (cur[p] - lo) * sizes[p]
+        if after < budget_bits and (budget_bits - after) >= (before - budget_bits):
+            continue
+        cur[p] = lo
+        push(heap, p)
+
+    total_cost = sum(profile[p][cur[p]] for p in profile)
+    eff = bits(cur) / total_params
+    return BudgetAllocation(shifts=cur, effective_shifts=eff,
+                            total_cost=total_cost)
+
+
+def quantize_with_allocation(params, qcfg: QuantConfig,
+                             alloc: BudgetAllocation):
+    """PTQ the tree with per-unit shift counts from an allocation."""
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        if not _budget_eligible(path, node):
+            return node
+        if node.ndim == 2:
+            if path not in alloc.shifts:
+                return node
+            return fake_quant(node, dataclasses.replace(
+                qcfg, n_shifts=alloc.shifts[path]))
+        lead = node.shape[:-2]
+        flat = node.reshape(-1, *node.shape[-2:])
+        slices = []
+        for i in range(flat.shape[0]):
+            n = alloc.shifts.get(path + (i,))
+            slices.append(flat[i] if n is None else fake_quant(
+                flat[i], dataclasses.replace(qcfg, n_shifts=n)))
+        return jnp.stack(slices).reshape(lead + node.shape[-2:])
+
+    return walk((), params)
+
+
+def leaf_sizes(params) -> Dict[Tuple, int]:
+    sizes: Dict[Tuple, int] = {}
+    for path, w in _eligible_leaves(params):
+        if w.ndim == 2:
+            sizes[path] = int(np.prod(w.shape))
+        else:
+            unit = int(np.prod(w.shape[-2:]))
+            for i in range(int(np.prod(w.shape[:-2]))):
+                sizes[path + (i,)] = unit
+    return sizes

@@ -1,0 +1,192 @@
+"""SWIS compressed weight storage (paper §3.3) — TPU lane-tiled bit-planes.
+
+Per group of ``M`` weights (along K) the format stores:
+
+* 1 sign bit / weight            -> ``sign_plane``  uint32 (K/32, C)
+* N mask bits / weight           -> ``mask_planes`` uint32 (N, K/32, C)
+* N shift values of 3 bits each  -> ``shifts``      int8   (K/M, C, N)
+  (SWIS-C stores a single 3-bit offset per group -> (K/M, C, 1) + N)
+* per-column scale               -> ``scale``       float32 (1, C)
+
+Bits are packed along K, 32 weights per uint32 word, so a (block_k, block_n)
+tile of the dense weight matrix corresponds to contiguous
+(block_k/32, block_n) words of each plane — the layout the Pallas kernel
+streams HBM->VMEM.
+
+Compression ratios (vs B-bit baseline, ignoring the shared scale):
+  SWIS:   B*M / (M*(1+N) + 3*N)
+  SWIS-C: B*M / (M*(1+N) + 3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.swis import QuantConfig, QuantizedWeight
+
+
+def pack_bits_u32(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a {0,1} array (K, ...) along axis 0 into uint32 (K/32, ...)."""
+    k = bits.shape[0]
+    if k % 32:
+        raise ValueError(f"K={k} not divisible by 32")
+    r = bits.reshape(k // 32, 32, *bits.shape[1:]).astype(jnp.uint32)
+    w = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)).reshape(
+        (1, 32) + (1,) * (bits.ndim - 1)
+    )
+    return jnp.sum(r * w, axis=1, dtype=jnp.uint32)
+
+
+def unpack_bits_u32(words: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits_u32` -> int32 {0,1} of shape (K, ...)."""
+    kw = words.shape[0]
+    idx = jnp.arange(32, dtype=jnp.uint32).reshape((1, 32) + (1,) * (words.ndim - 1))
+    bits = (words[:, None] >> idx) & jnp.uint32(1)
+    return bits.reshape(kw * 32, *words.shape[1:]).astype(jnp.int32)
+
+
+def pack_shift_nibbles(shifts: jnp.ndarray) -> jnp.ndarray:
+    """Pack 3-bit shift values two-per-byte: (..., N) int -> (..., ceil(N/2))
+    uint8 (low nibble = even index). Keeps HBM shift traffic at 4 bits per
+    shift instead of 8 (the paper's accounting is 3; 4 aligns to nibbles)."""
+    n = shifts.shape[-1]
+    s = shifts.astype(jnp.uint8)
+    if n % 2:
+        s = jnp.concatenate([s, jnp.zeros(s.shape[:-1] + (1,), jnp.uint8)],
+                            axis=-1)
+    lo = s[..., 0::2]
+    hi = s[..., 1::2]
+    return lo | (hi << 4)
+
+
+def unpack_shift_nibbles(packed: jnp.ndarray, n_shifts: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_shift_nibbles` -> (..., n_shifts) int32."""
+    lo = (packed & jnp.uint8(0x0F)).astype(jnp.int32)
+    hi = ((packed >> 4) & jnp.uint8(0x0F)).astype(jnp.int32)
+    out = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (-1,))
+    return out[..., :n_shifts]
+
+
+@dataclasses.dataclass
+class PackedWeight:
+    """SWIS bit-plane weight container (pytree-compatible via .tree())."""
+
+    sign_plane: jnp.ndarray  # uint32 (K/32, C); bit=1 => negative
+    mask_planes: jnp.ndarray  # uint32 (N, K/32, C)
+    shifts: jnp.ndarray  # uint8 (K/M, C, ceil(N/2)) nibble-packed
+    scale: jnp.ndarray  # float32 (1, C) or scalar
+    group_size: int
+    n_shifts: int
+    k: int
+    c: int
+    method: str = "swis"
+
+    def tree(self) -> dict:
+        return {
+            "sign_plane": self.sign_plane,
+            "mask_planes": self.mask_planes,
+            "shifts": self.shifts,
+            "scale": self.scale,
+        }
+
+    @property
+    def stored_bits(self) -> int:
+        """Exact metadata-true storage in bits (paper §3.3 accounting)."""
+        n_groups = (self.k // self.group_size) * self.c
+        mask_bits = self.k * self.c * self.n_shifts
+        sign_bits = self.k * self.c
+        shift_bits = n_groups * (3 if self.method == "swis_c" else 3 * self.n_shifts)
+        return mask_bits + sign_bits + shift_bits
+
+    @property
+    def compression_ratio(self) -> float:
+        return (self.k * self.c * 8) / self.stored_bits
+
+
+def pack(qw: QuantizedWeight) -> PackedWeight:
+    """Pack a :class:`QuantizedWeight` into bit planes.
+
+    Columns quantized with fewer shifts than the max simply have all-zero
+    high mask planes (the scheduling §4.3 guarantee that co-scheduled
+    columns share a shift count is enforced at tile granularity by
+    :mod:`repro.core.scheduling`).
+    """
+    k, c = qw.qmags.shape
+    n = int(qw.shifts.shape[-1])
+    m = qw.cfg.group_size
+    if k % 32:
+        raise ValueError(f"K={k} must be a multiple of 32 to pack")
+    sign_bits = (qw.signs < 0).astype(jnp.uint32)
+    planes = []
+    for j in range(n):
+        planes.append(pack_bits_u32((qw.masks >> j) & 1))
+    if qw.cfg.method == "swis_c":
+        # consecutive support vector: store ONLY the per-group offset
+        # (paper §2.2 — the SWIS-C compression advantage); shift j = off + j
+        shift_store = qw.shifts[..., :1].astype(jnp.uint8)
+    else:
+        shift_store = pack_shift_nibbles(qw.shifts)
+    return PackedWeight(
+        sign_plane=pack_bits_u32(sign_bits),
+        mask_planes=jnp.stack(planes),
+        shifts=shift_store,
+        scale=jnp.asarray(qw.scale, jnp.float32),
+        group_size=m,
+        n_shifts=n,
+        k=k,
+        c=c,
+        method=qw.cfg.method,
+    )
+
+
+def unpack_dense(pw: PackedWeight, dtype=jnp.float32) -> jnp.ndarray:
+    """Reconstruct the dense dequantized (K, C) matrix from planes."""
+    sign = 1.0 - 2.0 * unpack_bits_u32(pw.sign_plane).astype(jnp.float32)
+    if pw.method == "swis_c":
+        shifts = pw.shifts[..., :1].astype(jnp.int32) + jnp.arange(
+            pw.n_shifts, dtype=jnp.int32)
+    else:
+        shifts = unpack_shift_nibbles(pw.shifts, pw.n_shifts)
+    acc = jnp.zeros((pw.k, pw.c), jnp.float32)
+    for j in range(pw.n_shifts):
+        bits = unpack_bits_u32(pw.mask_planes[j]).astype(jnp.float32)
+        s = shifts[:, :, j].astype(jnp.float32)  # (K/M, C)
+        s_full = jnp.repeat(s, pw.group_size, axis=0)  # (K, C)
+        acc = acc + bits * jnp.exp2(s_full)
+    return (sign * acc * pw.scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Compression math (Fig. 5) + DPRed comparison baseline.
+# ---------------------------------------------------------------------------
+
+
+def compression_ratio(group_size: int, n_shifts: int, method: str = "swis",
+                      bits: int = 8) -> float:
+    m, n = group_size, n_shifts
+    shift_bits = 3 if method == "swis_c" else 3 * n
+    return bits * m / (m * (1 + n) + shift_bits)
+
+
+def dpred_compression(mags: np.ndarray, group_size: int, bits: int = 8) -> float:
+    """DPRed-style lossless per-group bitwidth compression (paper Fig. 5).
+
+    Each group stores its weights with the bitwidth of the highest active
+    bit position in the group, plus sign bits and a ceil(log2(B+1))-bit
+    per-group width field.
+    """
+    k = mags.shape[0]
+    m = group_size
+    if k % m:
+        mags = mags[: k - k % m]
+    g = mags.reshape(-1, m, *mags.shape[1:])
+    gmax = g.max(axis=1)
+    width = np.ceil(np.log2(np.maximum(gmax, 1) + 1)).astype(np.int64)
+    width = np.maximum(width, 1)
+    n_groups = width.size
+    total = (width * m).sum() + n_groups * int(np.ceil(np.log2(bits + 1))) + g.size
+    return g.size * bits / float(total)

@@ -1,0 +1,70 @@
+"""Quantization-aware retraining support (paper §5.1.2).
+
+Forward pass quantizes weights with SWIS (shift selection re-run per step,
+"treated as a special quantization, updated per batch input"); the backward
+pass is a straight-through estimator (STE) so gradients flow to the latent
+full-precision weights.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.swis import QuantConfig, fake_quant
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_quant(w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """SWIS fake-quant with identity (straight-through) gradient."""
+    return fake_quant(w, cfg)
+
+
+def _fwd(w, cfg):
+    return fake_quant(w, cfg), None
+
+
+def _bwd(cfg, _res, g):
+    return (g,)
+
+
+ste_quant.defvjp(_fwd, _bwd)
+
+
+def quantize_tree(params, qcfg: QuantConfig):
+    """STE fake-quant every eligible GEMM weight leaf of a parameter tree.
+
+    Used by the train step to quantize ONCE per optimizer step, *outside*
+    the rematted per-layer scan and the grad-accumulation microbatch loop —
+    selection then runs 1x per step instead of (2 x n_layers x n_micro)x
+    (fwd + remat-bwd recompute). Semantics match the paper's "shift selection
+    updated per batch input" (§5.1.2) exactly.
+    """
+    from repro.serve.quantized import _eligible
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        if not _eligible(path, node):
+            return node
+        if node.ndim == 3:
+            return jax.vmap(lambda m: ste_quant(m, qcfg))(node)
+        return ste_quant(node, qcfg)
+
+    return walk((), params)
+
+
+def maybe_quant(w: jnp.ndarray, cfg: QuantConfig | None, mode: str) -> jnp.ndarray:
+    """Uniform entry point used by model layers.
+
+    mode: 'off' (no quant), 'qat' (STE fake-quant), 'ptq' (fake-quant, no
+    gradient bypass — used for eval).
+    """
+    if cfg is None or cfg.method == "none" or mode == "off":
+        return w
+    if mode == "qat":
+        return ste_quant(w, cfg)
+    if mode == "ptq":
+        return fake_quant(w, cfg)
+    raise ValueError(f"unknown quant mode {mode!r}")

@@ -1,0 +1,154 @@
+"""SWIS filter scheduling (paper §4.3) — exact offline scheduler.
+
+Two phases, faithful to the paper:
+
+1. **Greedy demotion.** All filters (output columns) start one level above
+   the target. Repeatedly compute the MSE++ cost *increase* of demoting each
+   filter by one shift, demote the ``n_demote`` cheapest, recompute, until
+   the layer-average number of shifts equals the target.
+
+2. **Systolic-group snapping.** Filters sorted by assigned shift count are
+   partitioned into groups of ``sa_cols`` filters that the systolic array
+   schedules simultaneously — all filters in a group must share a shift
+   count. We enumerate nondecreasing per-group shift sequences that meet the
+   layer-average budget and pick the sequence with the lowest total MSE++.
+
+Runs offline in numpy (host); the output feeds :func:`repro.core.swis.quantize`
+column assignments and the packer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Schedule:
+    col_shifts: np.ndarray  # (C,) per-column shift counts (original order)
+    order: np.ndarray  # (C,) column permutation (sorted by shifts)
+    group_shifts: np.ndarray  # (n_groups,) shift count per systolic group
+    total_cost: float
+    effective_shifts: float
+
+
+def _check_costs(costs: dict[int, np.ndarray]) -> Sequence[int]:
+    levels = sorted(costs)
+    c = len(next(iter(costs.values())))
+    for n in levels:
+        if len(costs[n]) != c:
+            raise ValueError("cost arrays must share column count")
+    return levels
+
+
+def greedy_demotion(
+    costs: dict[int, np.ndarray],
+    target: float,
+    *,
+    n_demote: int = 1,
+    step: int = 1,
+) -> np.ndarray:
+    """Phase 1: per-filter shift counts averaging to ``target``.
+
+    ``costs[n][c]`` is the layer MSE++ of column ``c`` quantized with ``n``
+    shifts. ``step`` is 2 for double-shift PEs (even counts only).
+    """
+    levels = _check_costs(costs)
+    c = len(costs[levels[0]])
+    hi = min(l for l in levels if l >= target + (step - 1e-9)) if any(
+        l >= target + step - 1e-9 for l in levels
+    ) else max(levels)
+    cur = np.full(c, hi, np.int64)
+    lo = min(levels)
+    total_budget = target * c
+    demotions_needed = int(round((cur.sum() - total_budget) / step))
+    for _ in range(max(demotions_needed, 0)):
+        cand = cur - step >= lo
+        if not cand.any():
+            break
+        penalty = np.where(
+            cand,
+            np.array([costs[max(n - step, lo)][i] - costs[n][i]
+                      for i, n in enumerate(cur)]),
+            np.inf,
+        )
+        order = np.argsort(penalty)
+        for idx in order[:n_demote]:
+            if cur[idx] - step >= lo and cur.sum() - step >= total_budget:
+                cur[idx] -= step
+    return cur
+
+
+def snap_to_groups(
+    col_shifts: np.ndarray,
+    costs: dict[int, np.ndarray],
+    target: float,
+    *,
+    sa_cols: int,
+    step: int = 1,
+) -> Schedule:
+    """Phase 2: enforce a uniform shift count per systolic group.
+
+    Sorts columns by phase-1 shift count, then enumerates nondecreasing
+    per-group sequences with the required average and picks the cheapest.
+    """
+    levels = sorted(costs)
+    c = len(col_shifts)
+    if c % sa_cols:
+        raise ValueError(f"column count {c} not divisible by sa_cols {sa_cols}")
+    n_groups = c // sa_cols
+    order = np.argsort(col_shifts, kind="stable")
+    budget = target * c
+
+    # All nondecreasing sequences over `levels` of length n_groups whose
+    # group-weighted sum equals the budget.
+    best_seq, best_cost = None, np.inf
+    for seq in itertools.combinations_with_replacement(levels, n_groups):
+        if abs(sum(seq) * sa_cols - budget) > 1e-6:
+            continue
+        cost = 0.0
+        for g, n in enumerate(seq):
+            cols = order[g * sa_cols : (g + 1) * sa_cols]
+            cost += costs[n][cols].sum()
+        if cost < best_cost:
+            best_cost, best_seq = cost, seq
+
+    if best_seq is None:
+        # Fall back to the uniform ceiling level (target not representable).
+        lvl = min((l for l in levels if l >= target), default=max(levels))
+        best_seq = tuple([lvl] * n_groups)
+        best_cost = sum(costs[lvl][order].sum() for _ in range(1)) * 1.0
+
+    out = np.zeros(c, np.int64)
+    for g, n in enumerate(best_seq):
+        out[order[g * sa_cols : (g + 1) * sa_cols]] = n
+    return Schedule(
+        col_shifts=out,
+        order=order,
+        group_shifts=np.asarray(best_seq, np.int64),
+        total_cost=float(best_cost),
+        effective_shifts=float(out.mean()),
+    )
+
+
+def schedule_layer(
+    cost_fn: Callable[[int], np.ndarray],
+    target: float,
+    *,
+    levels: Sequence[int],
+    sa_cols: int = 8,
+    double_shift: bool = False,
+    n_demote: int = 1,
+) -> Schedule:
+    """End-to-end §4.3 scheduling for one layer.
+
+    ``cost_fn(n)`` returns per-column MSE++ at shift count ``n``.
+    """
+    step = 2 if double_shift else 1
+    if double_shift:
+        levels = [l for l in levels if l % 2 == 0]
+    costs = {n: np.asarray(cost_fn(n), np.float64) for n in levels}
+    phase1 = greedy_demotion(costs, target, n_demote=n_demote, step=step)
+    return snap_to_groups(phase1, costs, target, sa_cols=sa_cols, step=step)

@@ -1,0 +1,289 @@
+"""SWIS shift selection (paper §4.1): per-group support-vector enumeration.
+
+A *group* is ``M`` weights along the reduction (input-channel) dimension that
+share a support vector of ``N`` bit positions out of ``B`` underlying bits.
+For every candidate support vector we quantize each weight magnitude to the
+nearest representable subset-sum and score the group with MSE++ (Eq. 12):
+
+    MSE++ = (1/M) * ( alpha * (sum_i sign_i * (|w_i| - |q_i|))^2
+                      + sum_i (|w_i| - |q_i|)^2 )
+
+The enumeration is exact: C(B, N) combinations for SWIS, (B - N + 1)
+consecutive windows for SWIS-C, and the single MSB window for layer-wise
+truncation — all three run through the same machinery.
+"""
+from __future__ import annotations
+
+import functools
+from itertools import combinations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VARIANTS = ("swis", "swis_c", "trunc")
+
+
+@functools.lru_cache(maxsize=None)
+def support_combos(n_shifts: int, bits: int = 8, variant: str = "swis") -> np.ndarray:
+    """All candidate support vectors, shape (C, N), ascending bit positions."""
+    if n_shifts <= 0 or n_shifts > bits:
+        raise ValueError(f"n_shifts must be in [1, {bits}], got {n_shifts}")
+    if variant == "swis":
+        combos = list(combinations(range(bits), n_shifts))
+    elif variant == "swis_c":
+        combos = [tuple(range(o, o + n_shifts)) for o in range(bits - n_shifts + 1)]
+    elif variant == "trunc":
+        # layer-wise static: the fixed MSB window (LSB truncation).
+        combos = [tuple(range(bits - n_shifts, bits))]
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return np.asarray(combos, dtype=np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def combo_candidates(n_shifts: int, bits: int = 8, variant: str = "swis") -> np.ndarray:
+    """Subset sums for every combo, shape (C, 2**N).
+
+    Candidate ``k`` of combo ``c`` has value ``sum_j ((k >> j) & 1) * 2**s_cj``
+    so the candidate index *is* the mask-bit pattern.
+    """
+    combos = support_combos(n_shifts, bits, variant)
+    n = combos.shape[1]
+    ks = np.arange(2 ** n, dtype=np.int64)
+    sel = (ks[None, :, None] >> np.arange(n)[None, None, :]) & 1  # (1, K, N)
+    vals = (sel * (2 ** combos.astype(np.int64))[:, None, :]).sum(-1)  # (C, K)
+    return vals.astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _sorted_candidates(n_shifts: int, bits: int, variant: str):
+    """Sorted candidate values + the mask index that produced each, per combo."""
+    cand = combo_candidates(n_shifts, bits, variant)  # (C, K)
+    order = np.argsort(cand, axis=1, kind="stable")
+    return np.take_along_axis(cand, order, axis=1), order.astype(np.int32)
+
+
+def _nearest_sorted(cand_sorted: jnp.ndarray, mags: jnp.ndarray):
+    """Nearest value in a sorted 1-D candidate array for each magnitude.
+
+    Returns (quantized values, index into the *sorted* array).
+    """
+    k = cand_sorted.shape[0]
+    idx = jnp.searchsorted(cand_sorted, mags)
+    idx = jnp.clip(idx, 1, k - 1)
+    lo = cand_sorted[idx - 1]
+    hi = cand_sorted[idx]
+    take_lo = (mags - lo) <= (hi - mags)
+    q = jnp.where(take_lo, lo, hi)
+    j = jnp.where(take_lo, idx - 1, idx)
+    return q, j
+
+
+def _group_cost(mags, signs, q, alpha):
+    """MSE++ over the last axis (the group axis), Eq. 12 (up to the 1/M factor,
+    which does not change the argmin)."""
+    err = mags - q
+    signed = jnp.sum(signs * err, axis=-1)
+    return alpha * signed * signed + jnp.sum(err * err, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_shifts", "bits", "variant", "alpha"))
+def select_shifts(
+    mags: jnp.ndarray,
+    signs: jnp.ndarray,
+    *,
+    n_shifts: int,
+    bits: int = 8,
+    variant: str = "swis",
+    alpha: float = 1.0,
+):
+    """Exact enumeration over support vectors for grouped magnitudes.
+
+    Args:
+      mags:  (..., M) float32 integer-domain magnitudes in [0, 2**bits - 1].
+             Arbitrary leading batch dims — they are preserved end-to-end
+             (broadcasting only, no reshapes), so SPMD-sharded batch axes
+             (e.g. the TP-sharded output-column axis) stay sharded and the
+             selection induces NO collectives.
+      signs: (..., M) float32 in {-1, +1}.
+
+    Returns dict with (G = leading batch dims):
+      qmags:  (..., M) quantized magnitudes (float32, integer-valued).
+      shifts: (..., N) int32 selected bit positions (ascending).
+      masks:  (..., M) int32 mask-bit pattern (bit j set => bit position
+              shifts[..., j] active).
+      combo:  (...) int32 index of the winning combo.
+      cost:   (...) float32 winning MSE++ (without the 1/M factor).
+    """
+    cand_sorted_np, order_np = _sorted_candidates(n_shifts, bits, variant)
+    combos_np = support_combos(n_shifts, bits, variant)
+    cand_sorted = jnp.asarray(cand_sorted_np)  # (C, K)
+    order = jnp.asarray(order_np)  # (C, K) sorted-pos -> mask index
+    combos = jnp.asarray(combos_np)  # (C, N)
+
+    def per_combo(cs):
+        q, _ = _nearest_sorted(cs, mags)
+        return _group_cost(mags, signs, q, alpha)
+
+    costs = jax.vmap(per_combo)(cand_sorted)  # (C, ...)
+    best = jnp.argmin(costs, axis=0)  # (...)
+    best_cost = jnp.min(costs, axis=0)
+
+    # Re-quantize against only the winning combo to recover masks. K = 2^N
+    # is small, so an explicit distance argmin keeps everything batched.
+    cs_best = cand_sorted[best]  # (..., K)
+    d = jnp.abs(mags[..., None] - cs_best[..., None, :])  # (..., M, K)
+    jpos = jnp.argmin(d, axis=-1)  # (..., M) position in sorted order
+    qmags = jnp.take_along_axis(cs_best[..., None, :],
+                                jpos[..., None], axis=-1)[..., 0]
+    masks = jnp.take_along_axis(order[best][..., None, :],
+                                jpos[..., None], axis=-1)[..., 0]
+
+    return {
+        "qmags": qmags,
+        "shifts": combos[best],
+        "masks": masks,
+        "combo": best,
+        "cost": best_cost,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("n_shifts", "bits", "variant", "alpha"))
+def select_shifts_scan(
+    mags: jnp.ndarray,
+    signs: jnp.ndarray,
+    *,
+    n_shifts: int,
+    bits: int = 8,
+    variant: str = "swis",
+    alpha: float = 1.0,
+):
+    """Running-min variant of :func:`select_shifts` (identical results).
+
+    Scans over the (replicated) combo table carrying only the best-so-far
+    tensors: peak memory drops ~C(B,N)x versus the vmap enumeration, and —
+    because every op is an elementwise select or a searchsorted against a
+    1-D replicated table — GSPMD keeps all batch axes sharded with ZERO
+    collectives. This is the in-graph (QAT) selection path.
+    """
+    cand_sorted_np, order_np = _sorted_candidates(n_shifts, bits, variant)
+    combos_np = support_combos(n_shifts, bits, variant)
+    xs = (jnp.asarray(cand_sorted_np), jnp.asarray(order_np),
+          jnp.asarray(combos_np))
+    lead = mags.shape[:-1]
+    m = mags.shape[-1]
+    n = combos_np.shape[1]
+
+    def step(carry, x):
+        best_cost, q, masks, shifts = carry
+        cs, order, combo = x  # (K,), (K,), (N,) — replicated tables
+        qi, jpos = _nearest_sorted(cs, mags)
+        cost = _group_cost(mags, signs, qi, alpha)
+        better = cost < best_cost
+        best_cost = jnp.where(better, cost, best_cost)
+        q = jnp.where(better[..., None], qi, q)
+        masks = jnp.where(better[..., None], order[jpos], masks)
+        shifts = jnp.where(better[..., None], combo[(None,) * len(lead)],
+                           shifts)
+        return (best_cost, q, masks, shifts), None
+
+    init = (jnp.full(lead, jnp.inf, jnp.float32),
+            jnp.zeros(lead + (m,), jnp.float32),
+            jnp.zeros(lead + (m,), jnp.int32),
+            jnp.zeros(lead + (n,), jnp.int32))
+    (best_cost, q, masks, shifts), _ = jax.lax.scan(step, init, xs)
+    return {"qmags": q, "shifts": shifts, "masks": masks,
+            "combo": None, "cost": best_cost}
+
+
+def select_shifts_bruteforce(
+    mags: np.ndarray,
+    signs: np.ndarray,
+    *,
+    n_shifts: int,
+    bits: int = 8,
+    variant: str = "swis",
+    alpha: float = 1.0,
+):
+    """Reference oracle: materializes every (combo, mask) pair. Small inputs only."""
+    cand = combo_candidates(n_shifts, bits, variant)  # (C, K)
+    G, M = mags.shape
+    d = np.abs(mags[:, None, :, None] - cand[None, :, None, :])  # (G,C,M,K)
+    kbest = np.argmin(d, axis=-1)  # (G,C,M)
+    q = np.take_along_axis(
+        np.broadcast_to(cand[None, :, None, :], d.shape), kbest[..., None], axis=-1
+    )[..., 0]
+    err = mags[:, None, :] - q
+    signed = (signs[:, None, :] * err).sum(-1)
+    cost = alpha * signed ** 2 + (err ** 2).sum(-1)  # (G, C)
+    best = cost.argmin(axis=1)
+    ar = np.arange(G)
+    combos = support_combos(n_shifts, bits, variant)
+    return {
+        "qmags": q[ar, best],
+        "shifts": combos[best],
+        "masks": kbest[ar, best],
+        "combo": best,
+        "cost": cost[ar, best],
+    }
+
+
+def quantize_grouped(
+    mags: jnp.ndarray,
+    signs: jnp.ndarray,
+    *,
+    n_shifts: int,
+    group_size: int,
+    bits: int = 8,
+    variant: str = "swis",
+    alpha: float = 1.0,
+    chunk_elems: int = 1 << 22,
+):
+    """Group a (K, C) magnitude matrix along K and run selection.
+
+    Groups are formed depth-wise along the reduction axis (paper §3.2): group
+    g of column c is ``mags[g*M:(g+1)*M, c]``.
+
+    Sharding-aware layout: groups live as (K//M, C, M) — the (typically
+    TP-sharded) column axis C is never merged into another dimension, so the
+    whole selection runs shard-local under GSPMD (zero collectives). Memory
+    is bounded by chunking along the K//M axis only.
+
+    Returns dict of arrays shaped back to the matrix layout:
+      qmags (K, C), shifts (K//M, C, N), masks (K, C), cost (K//M, C).
+    """
+    K, C = mags.shape
+    M = group_size
+    if K % M:
+        raise ValueError(f"reduction dim {K} not divisible by group size {M}")
+    kg = K // M
+    # (K, C) -> (Kg, M, C) -> (Kg, C, M): pure split + transpose, C intact.
+    g_mags = mags.reshape(kg, M, C).transpose(0, 2, 1)
+    g_signs = signs.reshape(kg, M, C).transpose(0, 2, 1)
+
+    sel = functools.partial(
+        select_shifts_scan, n_shifts=n_shifts, bits=bits, variant=variant,
+        alpha=alpha)
+    chunk_kg = max(int(chunk_elems) // max(C * M, 1), 1)
+    if kg <= chunk_kg:
+        out = sel(g_mags, g_signs)
+    else:
+        pad = (-kg) % chunk_kg
+        gm = jnp.pad(g_mags, ((0, pad), (0, 0), (0, 0)))
+        gs = jnp.pad(g_signs, ((0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        gm = gm.reshape(-1, chunk_kg, C, M)
+        gs = gs.reshape(-1, chunk_kg, C, M)
+        out = jax.lax.map(lambda ab: sel(ab[0], ab[1]), (gm, gs))
+        out = jax.tree.map(
+            lambda x: x.reshape(-1, *x.shape[2:])[:kg], out)
+
+    qm = out["qmags"].transpose(0, 2, 1).reshape(K, C)
+    mk = out["masks"].transpose(0, 2, 1).reshape(K, C)
+    return {
+        "qmags": qm,
+        "masks": mk,
+        "shifts": out["shifts"],
+        "combo": out["combo"],
+        "cost": out["cost"],
+    }

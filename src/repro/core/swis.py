@@ -1,0 +1,266 @@
+"""High-level SWIS weight quantization API (paper §2, §4).
+
+Entry points:
+
+* :func:`quantize`     — full post-training quantization of a weight matrix,
+                         returning dequantized weights + all metadata needed
+                         for packing (signs / masks / shifts / scales).
+* :func:`fake_quant`   — jit-friendly dequantize-only path (used for QAT and
+                         for quantization-in-the-loss-graph). Supports
+                         fractional effective shift targets via in-graph
+                         filter scheduling (paper §4.3, simplified: global
+                         top-k column assignment).
+* :func:`act_truncate` — the activation-truncation baseline of Stripes-like
+                         accelerators (paper §5: layer-wise LSB truncation of
+                         8-bit activations).
+
+Weight layout convention: 2-D ``(K, C)`` with K the reduction (input) dim —
+groups of ``group_size`` weights are taken along K per output column C,
+matching the paper's depth-wise grouping (§3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Configuration for SWIS quantization of one weight family.
+
+    method: 'none' | 'swis' | 'swis_c' | 'trunc' (layer-wise weight
+        truncation baseline). 'trunc_act' is handled at the activation side.
+    n_shifts: effective number of shifts; fractional values engage filter
+        scheduling (§4.3).
+    group_size: PE group size M (weights sharing a support vector).
+    alpha: MSE++ signed-error coefficient (Eq. 12).
+    bits: underlying integer precision B.
+    per_channel: per-output-column scales (True) or per-tensor (False).
+    double_shift: restrict per-column shift counts to even values (DS PE,
+        §3.1); fractional/odd targets are met by mixing even counts.
+    schedule: enable in-graph filter scheduling for fractional targets.
+    """
+
+    method: str = "swis"
+    n_shifts: float = 4
+    group_size: int = 4
+    alpha: float = 1.0
+    bits: int = 8
+    # Paper-faithful default: one scale per layer. Per-channel scales are a
+    # beyond-paper accuracy option (see EXPERIMENTS.md §Perf).
+    per_channel: bool = False
+    double_shift: bool = False
+    schedule: bool = True
+    # Paper's weight-truncation baseline drops LSBs in hardware => floor.
+    # round_trunc=True upgrades it to round-to-nearest (beyond-paper).
+    round_trunc: bool = False
+
+    @property
+    def variant(self) -> str:
+        return {"swis": "swis", "swis_c": "swis_c", "trunc": "trunc"}[self.method]
+
+    def shift_levels(self) -> tuple[int, int, float]:
+        """(n_lo, n_hi, fraction_of_columns_at_hi) realizing ``n_shifts``."""
+        t = float(self.n_shifts)
+        step = 2 if self.double_shift else 1
+        lo = int(t // step) * step
+        if lo == t and lo > 0:
+            return lo, lo, 0.0
+        lo = max(lo, 0)
+        hi = lo + step
+        if lo == 0:
+            return hi, hi, 0.0  # below one step: round up
+        return lo, hi, (t - lo) / step
+
+
+def _to_int_domain(w: jnp.ndarray, bits: int, per_channel: bool):
+    """Symmetric sign-magnitude quantization to B bits (Eq. 2 domain)."""
+    maxq = float(2 ** bits - 1)
+    absw = jnp.abs(w)
+    amax = jnp.max(absw, axis=0, keepdims=True) if per_channel else jnp.max(absw)
+    scale = jnp.maximum(amax / maxq, 1e-12)
+    mags = jnp.clip(jnp.round(absw / scale), 0.0, maxq)
+    signs = jnp.where(w < 0, -1.0, 1.0)
+    return mags.astype(jnp.float32), signs.astype(jnp.float32), scale
+
+
+def _column_costs(mags, signs, n, cfg: QuantConfig, chunk_elems=None):
+    kw = {}
+    if chunk_elems is not None:
+        kw["chunk_elems"] = chunk_elems
+    out = selection.quantize_grouped(
+        mags,
+        signs,
+        n_shifts=n,
+        group_size=cfg.group_size,
+        bits=cfg.bits,
+        variant=cfg.variant,
+        alpha=cfg.alpha,
+        **kw,
+    )
+    return out, out["cost"].sum(axis=0)  # (C,) summed MSE++ per column
+
+
+# In-graph (QAT) path: never chunk — under SPMD the lax.map scan would slice
+# along a sharded axis and force all-gathers; sharding already bounds the
+# per-device working set. The offline PTQ path keeps the default chunking.
+_NO_CHUNK = 1 << 62
+
+
+def _floor_truncate(mags: jnp.ndarray, n: int, bits: int) -> jnp.ndarray:
+    """Hardware LSB truncation: drop the lowest (bits - n) magnitude bits."""
+    step = float(2 ** (bits - int(n)))
+    return jnp.floor(mags / step) * step
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _fake_quant_impl(w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    mags, signs, scale = _to_int_domain(w, cfg.bits, cfg.per_channel)
+    n_lo, n_hi, frac = cfg.shift_levels()
+
+    if cfg.method == "trunc" and not cfg.round_trunc:
+        q = _floor_truncate(mags, max(n_lo, 1), cfg.bits)
+        return (signs * q * scale).astype(w.dtype)
+
+    if n_lo == n_hi or not cfg.schedule or frac == 0.0:
+        out, _ = _column_costs(mags, signs, n_hi if n_lo != n_hi else n_lo,
+                               cfg, chunk_elems=_NO_CHUNK)
+        q = out["qmags"]
+    else:
+        out_lo, cost_lo = _column_costs(mags, signs, n_lo, cfg,
+                                        chunk_elems=_NO_CHUNK)
+        out_hi, cost_hi = _column_costs(mags, signs, n_hi, cfg,
+                                        chunk_elems=_NO_CHUNK)
+        # §4.3 (in-graph form): columns with the largest penalty for being
+        # demoted keep the higher shift count; the assignment keeps the
+        # layer-average number of shifts equal to the target. frac and the
+        # column count are trace-time constants, so k_hi is static.
+        penalty = cost_lo - cost_hi  # >= 0
+        c = mags.shape[1]
+        k_hi = int(round(frac * c))
+        _, top_idx = jax.lax.top_k(penalty, max(k_hi, 1))
+        use_hi = jnp.zeros((c,), bool).at[top_idx[:k_hi]].set(True)
+        q = jnp.where(use_hi[None, :], out_hi["qmags"], out_lo["qmags"])
+    return (signs * q * scale).astype(w.dtype)
+
+
+def fake_quant(w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Quantize-dequantize ``w`` under ``cfg`` (no packing). Jit-friendly.
+
+    Accepts any array whose *leading* axis is the reduction dim; trailing
+    axes are flattened into columns.
+    """
+    if cfg.method == "none":
+        return w
+    shape = w.shape
+    k = shape[0]
+    w2 = w.reshape(k, -1)
+    m = cfg.group_size
+    if k % m:
+        pad = (-k) % m
+        w2 = jnp.pad(w2, ((0, pad), (0, 0)))
+        q = _fake_quant_impl(w2, cfg)[:k]
+    else:
+        q = _fake_quant_impl(w2, cfg)
+    return q.reshape(shape)
+
+
+@dataclasses.dataclass
+class QuantizedWeight:
+    """Full PTQ result for one (K, C) weight matrix."""
+
+    qweights: jnp.ndarray  # (K, C) dequantized float
+    qmags: jnp.ndarray  # (K, C) integer-valued magnitudes
+    signs: jnp.ndarray  # (K, C) {-1, +1}
+    masks: jnp.ndarray  # (K, C) int32 mask-bit pattern per weight
+    shifts: jnp.ndarray  # (K//M, C, N) int32 selected bit positions
+    scale: jnp.ndarray  # (1, C) or scalar
+    col_shifts: jnp.ndarray  # (C,) int32 per-column shift count
+    cost: jnp.ndarray  # (K//M, C) group MSE++
+    cfg: QuantConfig
+
+
+def quantize(w: jnp.ndarray, cfg: QuantConfig) -> QuantizedWeight:
+    """Post-training SWIS quantization with metadata (not jitted; offline)."""
+    if w.ndim != 2:
+        raise ValueError("quantize expects a 2-D (K, C) matrix; reshape first")
+    K, C = w.shape
+    if K % cfg.group_size:
+        raise ValueError(f"K={K} not divisible by group size {cfg.group_size}")
+    mags, signs, scale = _to_int_domain(w, cfg.bits, cfg.per_channel)
+    n_lo, n_hi, frac = cfg.shift_levels()
+
+    if cfg.method == "trunc" and not cfg.round_trunc:
+        n = max(n_lo, 1)
+        qm = _floor_truncate(mags, n, cfg.bits)
+        window = jnp.arange(cfg.bits - n, cfg.bits, dtype=jnp.int32)
+        masks = (qm / float(2 ** (cfg.bits - n))).astype(jnp.int32)
+        shifts = jnp.broadcast_to(
+            window, (K // cfg.group_size, C, n)).astype(jnp.int32)
+        err = mags - qm
+        cost = (err ** 2).reshape(K // cfg.group_size, cfg.group_size, C).sum(1)
+        return QuantizedWeight(
+            qweights=(signs * qm * scale).astype(w.dtype),
+            qmags=qm, signs=signs, masks=masks, shifts=shifts, scale=scale,
+            col_shifts=jnp.full((C,), n, jnp.int32), cost=cost, cfg=cfg,
+        )
+
+    if n_lo == n_hi or not cfg.schedule or frac == 0.0:
+        n = n_hi if n_lo != n_hi else n_lo
+        out, _ = _column_costs(mags, signs, n, cfg)
+        col_shifts = jnp.full((C,), n, jnp.int32)
+        qm, masks, shifts, cost = out["qmags"], out["masks"], out["shifts"], out["cost"]
+    else:
+        out_lo, cost_lo = _column_costs(mags, signs, n_lo, cfg)
+        out_hi, cost_hi = _column_costs(mags, signs, n_hi, cfg)
+        penalty = cost_lo - cost_hi
+        k_hi = int(round(frac * C))
+        order = jnp.argsort(-penalty)
+        use_hi = jnp.zeros((C,), bool).at[order[:k_hi]].set(True)
+        qm = jnp.where(use_hi[None, :], out_hi["qmags"], out_lo["qmags"])
+        masks = jnp.where(use_hi[None, :], out_hi["masks"], out_lo["masks"])
+        # Pad lo shifts with an inert extra position (repeat last) so shapes match.
+        pad_n = out_hi["shifts"].shape[-1] - out_lo["shifts"].shape[-1]
+        lo_shifts = jnp.concatenate(
+            [out_lo["shifts"]] + [out_lo["shifts"][..., -1:]] * pad_n, axis=-1
+        )
+        shifts = jnp.where(use_hi[None, :, None], out_hi["shifts"], lo_shifts)
+        cost = jnp.where(use_hi[None, :], out_hi["cost"], out_lo["cost"])
+        col_shifts = jnp.where(use_hi, n_hi, n_lo).astype(jnp.int32)
+
+    return QuantizedWeight(
+        qweights=(signs * qm * scale).astype(w.dtype),
+        qmags=qm,
+        signs=signs,
+        masks=masks,
+        shifts=shifts,
+        scale=scale,
+        col_shifts=col_shifts,
+        cost=cost,
+        cfg=cfg,
+    )
+
+
+def rmse(w: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(jnp.mean((w - q) ** 2))
+
+
+@functools.partial(jax.jit, static_argnames=("n_shifts", "bits"))
+def act_truncate(a: jnp.ndarray, n_shifts: int, bits: int = 8) -> jnp.ndarray:
+    """Layer-wise activation LSB truncation baseline (paper §5).
+
+    Quantizes activations to ``bits`` then zeroes the lowest ``bits-n`` bits.
+    """
+    maxq = float(2 ** bits - 1)
+    amax = jnp.maximum(jnp.max(jnp.abs(a)), 1e-12)
+    scale = amax / maxq
+    mags = jnp.clip(jnp.round(jnp.abs(a) / scale), 0.0, maxq)
+    step = float(2 ** (bits - n_shifts))
+    mags = jnp.floor(mags / step) * step
+    return (jnp.sign(a) * mags * scale).astype(a.dtype)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the SWIS kernels.
+
+``swis_matmul_ref`` computes the same function as the Pallas kernel from the
+same packed operands — used by tests (assert_allclose across shape/dtype
+sweeps) and as the CPU/dry-run fallback path inside models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedWeight, unpack_bits_u32
+
+
+def dequant_ref(
+    sign_plane: jnp.ndarray,
+    mask_planes: jnp.ndarray,
+    shifts: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    group: int,
+    dtype=jnp.float32,
+    consecutive: bool = False,
+) -> jnp.ndarray:
+    """Dense (K, N) dequantized weights from packed planes (jnp, no Pallas).
+
+    ``consecutive``: SWIS-C layout — ``shifts`` holds one offset byte per
+    group and shift j = offset + j.
+    """
+    n_shifts = mask_planes.shape[0]
+    k = sign_plane.shape[0] * 32
+    sign = 1 - 2 * unpack_bits_u32(sign_plane)  # (K, N) int32
+    acc = jnp.zeros(sign.shape, jnp.int32)
+    for j in range(n_shifts):
+        bits = unpack_bits_u32(mask_planes[j])
+        if consecutive:
+            s = shifts[:, :, 0].astype(jnp.int32) + j
+        else:
+            # inline nibble extraction: one slice+shift+mask per plane
+            # (keeps the dequant's materialized-intermediate footprint
+            # identical to the int8 layout while storing half the bytes)
+            byte = shifts[:, :, j // 2].astype(jnp.int32)
+            s = (byte >> (4 * (j % 2))) & 0xF
+        s_full = jnp.broadcast_to(
+            s[:, None, :], (k // group, group, s.shape[-1])
+        ).reshape(k, -1)
+        acc = acc + (bits << s_full)
+    w = (sign * acc).astype(jnp.float32) * jnp.asarray(scale, jnp.float32).reshape(1, -1)
+    return w.astype(dtype)
+
+
+def swis_matmul_ref(
+    x: jnp.ndarray,
+    sign_plane: jnp.ndarray,
+    mask_planes: jnp.ndarray,
+    shifts: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    group: int,
+    consecutive: bool = False,
+) -> jnp.ndarray:
+    """Oracle for :func:`repro.kernels.swis_matmul.swis_matmul_packed`."""
+    w = dequant_ref(sign_plane, mask_planes, shifts, scale, group=group,
+                    dtype=x.dtype, consecutive=consecutive)
+    return jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )

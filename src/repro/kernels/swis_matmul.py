@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: SWIS dequant-in-kernel matmul.
+
+TPU-native realization of the paper's bit-serial PE (DESIGN.md §2): the
+compressed SWIS representation (sign bit-plane + N mask bit-planes packed in
+uint32 lanes + per-group 3-bit shifts) streams HBM->VMEM, the kernel
+reconstructs an integer weight tile *in VMEM* (the analogue of the shift-
+accumulate loop, Eq. 7) and feeds the MXU with a dense tile:
+
+    w_tile[k, n] = sign[k, n] * sum_j  mask_j[k, n] << shifts[k // M, n, j]
+    out[i, n]   += x[i, k] @ (w_tile * scale[n])
+
+The HBM weight traffic is the *packed* bytes — (M(1+N)+3N)/(8M) of the int8
+baseline — which is where SWIS's win lands on TPU (memory roofline term).
+
+Tiling: grid (M_rows/bm, N_cols/bn, K/bk); the fp32 accumulator lives in the
+output VMEM block across the K loop (output-stationary, like the paper's OS
+systolic dataflow). bk must be a multiple of 32 (bit packing) and of the
+group size M; bn a multiple of 128 (lane width); bm a multiple of 8.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.packing import PackedWeight
+
+
+def _swis_matmul_kernel(
+    x_ref,  # (bm, bk) activation tile
+    sign_ref,  # (bk // 32, bn) uint32
+    mask_ref,  # (n_shifts, bk // 32, bn) uint32
+    shift_ref,  # (bk // group, bn, ceil(n_shifts/2)) uint8 nibble-packed
+    scale_ref,  # (1, bn) float32
+    o_ref,  # (bm, bn) float32 accumulator
+    *,
+    n_shifts: int,
+    group: int,
+    bk: int,
+    k_steps: int,
+    consecutive: bool,
+):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    words = bk // 32
+    bn = sign_ref.shape[-1]
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (words, 32, bn), 1)
+
+    # Sign plane: bit=1 -> negative.
+    sbits = (sign_ref[...][:, None, :] >> lane) & jnp.uint32(1)
+    sign = (1 - 2 * sbits.astype(jnp.int32)).reshape(bk, bn)
+
+    # Shift-accumulate (Eq. 7): one mask plane per shift index. The plane
+    # loop is unrolled (n_shifts is static) — the double-shift PE of §3.1
+    # corresponds to the compiler pipelining two planes per pass.
+    w_mag = jnp.zeros((bk, bn), jnp.int32)
+    for j in range(n_shifts):
+        mbits = (mask_ref[j][:, None, :] >> lane) & jnp.uint32(1)
+        mbits = mbits.astype(jnp.int32).reshape(bk, bn)
+        if consecutive:  # SWIS-C: shift j = per-group offset + j
+            s = shift_ref[:, :, 0].astype(jnp.int32) + j
+        else:
+            byte = shift_ref[:, :, j // 2].astype(jnp.int32)
+            s = (byte >> (4 * (j % 2))) & 0xF  # (bk // group, bn)
+        s_full = jnp.broadcast_to(
+            s[:, None, :], (bk // group, group, bn)
+        ).reshape(bk, bn)
+        w_mag = w_mag + (mbits << s_full)
+
+    w = (sign * w_mag).astype(x_ref.dtype)
+    acc = jax.lax.dot_general(
+        x_ref[...],
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc
+
+    @pl.when(k_idx == k_steps - 1)
+    def _finish():
+        o_ref[...] *= scale_ref[0, :][None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_shifts", "group", "bm", "bn", "bk", "interpret",
+                     "consecutive"),
+)
+def swis_matmul_packed(
+    x: jnp.ndarray,
+    sign_plane: jnp.ndarray,
+    mask_planes: jnp.ndarray,
+    shifts: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    n_shifts: int,
+    group: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+    consecutive: bool = False,
+):
+    """``x (M, K) @ dequant(packed (K, N)) -> (M, N) float32``.
+
+    See module docstring for the packed layout. ``interpret=True`` executes
+    the kernel body in Python on CPU (validation); on real TPU pass False.
+    """
+    m, k = x.shape
+    kw, n = sign_plane.shape
+    assert kw * 32 == k, (kw, k)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{k})x({k},{n}) not divisible by tiles "
+                         f"({bm},{bn},{bk})")
+    if bk % 32 or bk % group:
+        raise ValueError(f"bk={bk} must be a multiple of 32 and group={group}")
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+
+    kernel = functools.partial(
+        _swis_matmul_kernel,
+        n_shifts=n_shifts,
+        group=group,
+        bk=bk,
+        k_steps=k_steps,
+        consecutive=consecutive,
+    )
+    scale2d = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, n))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 32, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((n_shifts, bk // 32, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((bk // group, bn,
+                          1 if consecutive else (n_shifts + 1) // 2),
+                         lambda i, j, kk: (kk, j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, sign_plane, mask_planes, shifts, scale2d)

@@ -1,0 +1,92 @@
+"""Perf-iteration tooling: compile a cell at shallow depth (exact costs,
+fast turnaround) and report the dominant collective instructions + roofline
+terms, so each hypothesis -> change -> measure cycle takes ~1 minute.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch mistral-large-123b \
+      --shape train_4k [--units 1] [--quant qat|off] [--full]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import re
+from collections import defaultdict
+
+import numpy as np
+
+import repro.configs as C
+from repro.configs.base import SHAPES
+from repro.core.swis import QuantConfig
+from repro.launch import roofline as RL
+from repro.launch.dryrun import _build_lowered, _compiled_costs, _shallow_cfg, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.configs.base import QuantPolicy
+
+
+def top_collectives(hlo: str, k: int = 12):
+    """Aggregate collective instructions by (kind, shape), largest first."""
+    agg = defaultdict(lambda: [0, 0.0])
+    for line in hlo.splitlines():
+        m = RL._INSTR_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind")
+        shapes = RL._SHAPE_RE.findall(m.group("result"))
+        size = sum(RL._shape_bytes(d, dims) for d, dims in shapes)
+        g = RL._group_size(line)
+        sig = f"{kind} g={g} {m.group('result')[:60]}"
+        agg[sig][0] += 1
+        agg[sig][1] += size
+    rows = sorted(agg.items(), key=lambda kv: -kv[1][1])[:k]
+    return [(sig, n, b) for sig, (n, b) in rows]
+
+
+def measure(arch: str, shape_name: str, *, units: int = 1, quant: str = "qat",
+            mesh_kind: str = "single", qcfg=None, show: int = 10,
+            overrides=None):
+    cfg = C.get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    qcfg = qcfg or QuantConfig(method="swis", n_shifts=4, group_size=4)
+    model_cfg = cfg
+    if shape.kind == "train":
+        model_cfg = cfg.replace(quant=QuantPolicy(
+            cfg=qcfg, mode="qat" if quant == "qat" else "off"))
+    scfg = _shallow_cfg(model_cfg, units)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    lowered = _build_lowered(scfg, shape, mesh, quant=quant, qcfg=qcfg)
+    compiled = lowered.compile()
+    costs = _compiled_costs(compiled)
+    hlo = compiled.as_text()
+    terms = RL.roofline_terms(costs["flops"], costs["bytes_accessed"],
+                              costs["collective_wire"])
+    print(f"== {arch} x {shape_name} ({units} unit(s), quant={quant}) ==")
+    print(f" flops/chip      {costs['flops']:.3e}")
+    print(f" bytes/chip      {costs['bytes_accessed']:.3e}")
+    print(f" coll wire/chip  {costs['collective_wire']:.3e}")
+    print(f" terms: compute={terms['compute_s']:.4f}s "
+          f"memory={terms['memory_s']:.4f}s coll={terms['collective_s']:.4f}s"
+          f" -> {terms['bottleneck']}")
+    print(" top collectives:")
+    for sig, n, b in top_collectives(hlo, show):
+        print(f"  {b/2**30:8.2f} GiB  x{n:<4d} {sig}")
+    return costs, terms, hlo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--units", type=int, default=1)
+    ap.add_argument("--quant", default="qat")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--show", type=int, default=10)
+    args = ap.parse_args()
+    measure(args.arch, args.shape, units=args.units, quant=args.quant,
+            mesh_kind=args.mesh, show=args.show)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips * 819 GB/s HBM)
+  collective term = collective_bytes / (chips * 50 GB/s ICI)
+
+``compiled.cost_analysis()`` reports the *per-device* SPMD program, so terms
+are computed per chip directly (equivalent to the global/chips form).
+collective_bytes is parsed from the HLO text: the summed operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(?P<result>\([^=]*?\)|\S+)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective traffic parsed from the compiled HLO.
+
+    Post-optimization HLO prints operands without shapes, so sizes come from
+    the *result* shape + the replica-group size g. Two accountings:
+
+    * ``operand``: the literal summed operand sizes (all-gather operand =
+      result/g, reduce-scatter operand = result*g, others = result).
+    * ``wire``: per-device link bytes of bandwidth-optimal implementations
+      (ring all-reduce 2P(g-1)/g, all-gather/all-to-all R(g-1)/g,
+      reduce-scatter R(g-1), permute P) — the number the collective
+      roofline term uses.
+    """
+    wire = {k: 0.0 for k in COLLECTIVES}
+    operand = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue  # counted at -start
+        kind = m.group("kind")
+        result = m.group("result")
+        shapes = _SHAPE_RE.findall(result)
+        if m.group("suffix") == "-start" and len(shapes) > 1:
+            # async start returns (operand alias..., result); use the largest
+            sizes = [_shape_bytes(d, dims) for d, dims in shapes]
+            r = max(sizes)
+        else:
+            r = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        g = max(_group_size(line), 1)
+        if g == 1 and kind != "collective-permute":
+            # degenerate replica group: no traffic. (Permutes carry their
+            # peers in source_target_pairs, not replica_groups — always
+            # count their payload.)
+            counts[kind] += 1
+            continue
+        if kind == "all-gather":
+            wire[kind] += r * (g - 1) / g
+            operand[kind] += r / g
+        elif kind == "all-reduce":
+            wire[kind] += 2.0 * r * (g - 1) / g
+            operand[kind] += r
+        elif kind == "reduce-scatter":
+            wire[kind] += r * (g - 1)
+            operand[kind] += r * g
+        elif kind == "all-to-all":
+            wire[kind] += r * (g - 1) / g
+            operand[kind] += r
+        else:  # collective-permute
+            wire[kind] += r
+            operand[kind] += r
+        counts[kind] += 1
+    out = {k: wire[k] for k in COLLECTIVES}
+    out["total"] = sum(wire.values())
+    out["operand_total"] = sum(operand.values())
+    out["counts"] = counts
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float) -> Dict[str, float]:
+    """All inputs are per-device. Returns seconds per step + bottleneck."""
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(t_compute, t_memory, t_coll)
+    terms["roofline_bound_s"] = total
+    terms["compute_fraction"] = t_compute / total if total else 0.0
+    return terms
+
+
+def model_flops(n_params: float, n_active_params: float, tokens: float,
+                kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (fwd-only), N = active params."""
+    n = n_active_params or n_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

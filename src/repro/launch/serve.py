@@ -1,0 +1,70 @@
+"""Serving launcher: batched prefill+decode with optional SWIS-packed weights.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
+      --batch 4 --prompt-len 8 --tokens 24 --packed --n-shifts 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.core.swis import QuantConfig
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import DecodeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(C.ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--packed", action="store_true")
+    ap.add_argument("--n-shifts", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt", default=None, help="checkpoint dir to serve")
+    args = ap.parse_args()
+
+    cfg = C.get_smoke(args.arch) if args.smoke else C.get_config(args.arch)
+    cfg = cfg.replace(compute_dtype="float32")  # CPU demo
+    model = Model(cfg)
+    if args.ckpt:
+        from repro.checkpoint import CheckpointManager
+        from repro.train.steps import init_state
+
+        template = init_state(pp.abstract_params(model.build()))
+        state, _ = CheckpointManager(args.ckpt).restore(template)
+        params = state.params
+    else:
+        params = pp.init_params(model.build(), jax.random.key(0))
+
+    eng = DecodeEngine(
+        cfg, params, max_len=args.prompt_len + args.tokens + 1,
+        batch=args.batch, packed=args.packed,
+        quant_cfg=QuantConfig(method="swis", n_shifts=args.n_shifts,
+                              group_size=args.group_size))
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = eng.generate(prompt, args.tokens, temperature=args.temperature)
+    dt = time.perf_counter() - t0
+    report = {"arch": cfg.name, "batch": args.batch, "tokens": args.tokens,
+              "wall_s": round(dt, 2),
+              "tok_per_s": round(args.batch * args.tokens / dt, 1)}
+    if eng.pack_stats:
+        report["packed_weights"] = eng.pack_stats["n_packed"]
+        report["compression"] = round(eng.pack_stats["compression"], 2)
+    print(json.dumps(report, indent=1))
+    print("sample:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

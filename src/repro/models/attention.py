@@ -1,0 +1,222 @@
+"""Attention: GQA/MHA/MQA, local (sliding-window), cross-attention, KV cache.
+
+Training/prefill uses a KV-chunked online-softmax (flash-style) scan so the
+S x S score matrix is never materialized — memory O(S * chunk). Decode uses a
+single einsum over the (sharded) cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import build_linear, dense, rope
+from repro.models.params import P
+
+NEG_INF = -1e30
+
+
+def build_attention(cfg: ArchConfig, kind: str = "self") -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kv_in = cfg.vlm.vision_dim if (kind == "cross" and cfg.vlm) else d
+    return {
+        "wq": build_linear(d, h * dh, ("embed", "q_proj")),
+        "wk": build_linear(kv_in, hkv * dh, ("embed", "kv_proj")),
+        "wv": build_linear(kv_in, hkv * dh, ("embed", "kv_proj")),
+        "wo": build_linear(h * dh, d, ("q_proj", "embed")),
+    }
+
+
+def build_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": P((batch, max_len, hkv, dh), ("batch", "kv_seq", "kv_heads", "head_dim"),
+               init="zeros", dtype=dtype),
+        "v": P((batch, max_len, hkv, dh), ("batch", "kv_seq", "kv_heads", "head_dim"),
+               init="zeros", dtype=dtype),
+    }
+
+
+def _split_heads(x, n_heads, d_head):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, d_head)
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # (B, Sq, H, Dh)
+    k: jnp.ndarray,  # (B, Skv, Hkv, Dh)
+    v: jnp.ndarray,
+    *,
+    q_pos: jnp.ndarray,  # (Sq,) int32
+    kv_pos: jnp.ndarray,  # (Skv,) int32; negative => padding
+    causal: bool,
+    window: Optional[int],
+    chunk: int,
+) -> jnp.ndarray:
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    chunk = min(chunk, skv)
+    if skv % chunk:
+        pad = (-skv) % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+        skv += pad
+    n_chunks = skv // chunk
+
+    qh = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32) * (dh ** -0.5)
+    kc = k.reshape(b, n_chunks, chunk, hkv, dh)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dh)
+    pc = kv_pos.reshape(n_chunks, chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, p_c = xs
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk",
+            qh,
+            k_c.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        valid = p_c[None, :] >= 0
+        if causal:
+            valid &= p_c[None, :] <= q_pos[:, None]
+        if window is not None:
+            valid &= p_c[None, :] > q_pos[:, None] - window
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bhgqk,bkhd->bhgqd",
+            p,
+            v_c.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), pc),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def full_attention(
+    q: jnp.ndarray,  # (B, Sq, H, Dh) — decode: Sq == 1
+    k: jnp.ndarray,  # (B, Skv, Hkv, Dh)
+    v: jnp.ndarray,
+    *,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    causal: bool,
+    window: Optional[int],
+) -> jnp.ndarray:
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qh = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32) * (dh ** -0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    valid = kv_pos[None, :] >= 0
+    if causal:
+        valid &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        valid &= kv_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attention_apply(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg: ArchConfig,
+    *,
+    positions: jnp.ndarray,  # (S,) int32 absolute positions of x
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    ctx: Optional[jnp.ndarray] = None,  # cross-attn context (B, P, Dv)
+    cache: Optional[dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,  # scalar int32 write offset
+):
+    """Returns (out (B,S,D), new_cache_or_None)."""
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+
+    q = _split_heads(dense(p["wq"], x, cfg), h, dh)
+    kv_src = ctx if ctx is not None else x
+    k = _split_heads(dense(p["wk"], kv_src, cfg), hkv, dh)
+    v = _split_heads(dense(p["wv"], kv_src, cfg), hkv, dh)
+
+    if use_rope and ctx is None:
+        q = rope(q, positions[None, :], cfg.rope_theta)
+        k = rope(k, positions[None, :], cfg.rope_theta)
+
+    new_cache = None
+    if ctx is not None:
+        kv_pos = jnp.arange(ctx.shape[1], dtype=jnp.int32)
+        out = chunked_attention(
+            q, k, v, q_pos=positions, kv_pos=kv_pos, causal=False,
+            window=None, chunk=cfg.attn_chunk,
+        )
+    elif cache is not None:
+        # Ring-buffer cache {'k','v','pos'} of length cache_len (== window
+        # for local attention). Three statically-distinguished write modes:
+        # full-sequence prefill, tail prefill (S >= cache_len), and
+        # single-token decode (wrapping slot).
+        idx = cache_index
+        cache_len = cache["k"].shape[1]
+        kd = k.astype(cache["k"].dtype)
+        vd = v.astype(cache["v"].dtype)
+        new_pos = positions.astype(jnp.int32)
+        if s >= cache_len:
+            # Keep the ring invariant slot == pos % cache_len so later
+            # single-token writes overwrite the *oldest* entry.
+            shift = jnp.mod(new_pos[-cache_len], cache_len)
+            ck = jnp.roll(kd[:, -cache_len:], shift, axis=1)
+            cv = jnp.roll(vd[:, -cache_len:], shift, axis=1)
+            cp = jnp.roll(new_pos[-cache_len:], shift)
+        elif s == 1:
+            slot = jnp.mod(idx, cache_len)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kd, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vd, (0, slot, 0, 0))
+            cp = jax.lax.dynamic_update_slice(cache["pos"], new_pos, (slot,))
+        else:  # chunked prefill within capacity (no wrap by construction)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kd, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vd, (0, idx, 0, 0))
+            cp = jax.lax.dynamic_update_slice(cache["pos"], new_pos, (idx,))
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+        if s == 1:
+            # decode: attend over the (ring) cache
+            out = full_attention(q, ck, cv, q_pos=positions, kv_pos=cp,
+                                 causal=causal, window=window)
+        else:
+            # whole-prompt prefill: the ring cache only retains the last
+            # `cache_len` KVs, so early queries must attend over the full
+            # current K/V (cache is write-only here; decode reads it).
+            out = chunked_attention(
+                q, k, v, q_pos=positions, kv_pos=positions, causal=causal,
+                window=window, chunk=cfg.attn_chunk)
+    else:
+        kv_pos = positions
+        out = chunked_attention(
+            q, k, v, q_pos=positions, kv_pos=kv_pos, causal=causal,
+            window=window, chunk=cfg.attn_chunk,
+        )
+
+    y = dense(p["wo"], out.reshape(b, s, h * dh), cfg)
+    return y, new_cache

@@ -1,0 +1,271 @@
+"""Top-level model: embedding -> pattern-unit stack (scan + remat) -> norm ->
+unembed, plus loss / prefill / decode entry points and dry-run input specs.
+
+The depth axis is organized as ``n_units`` repetitions of the family's
+pattern unit (scanned) plus ``tail`` unrolled layers, so heterogeneous
+patterns (griffin 1:2, vlm cross-every-5) stay scan-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import params as pp
+from repro.models import transformer as tfm
+from repro.models.layers import build_embed, build_norm, embed_apply, norm_apply, unembed_apply
+from repro.models.params import P
+from repro.parallel.ctx import constrain
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.unit = tfm.pattern_for(cfg)
+        u = len(self.unit)
+        self.n_units = cfg.n_layers // u
+        self.tail = tuple(self.unit[: cfg.n_layers % u])
+
+    # ------------------------------------------------------------------
+    # Parameter / cache trees (placeholders)
+    # ------------------------------------------------------------------
+
+    def build(self) -> dict:
+        cfg = self.cfg
+        unit_tree = {
+            f"sub{i}_{kind}": tfm.build_block(cfg, kind)
+            for i, kind in enumerate(self.unit)
+        }
+        tree = {
+            "embed": build_embed(cfg),
+            "blocks": pp.stack(unit_tree, self.n_units),
+            "final_norm": build_norm(cfg.d_model),
+        }
+        if self.tail:
+            tree["tail"] = {
+                f"tail{i}_{kind}": tfm.build_block(cfg, kind)
+                for i, kind in enumerate(self.tail)
+            }
+        if cfg.family == "encoder":
+            # modality frontend stub: projects precomputed frame embeddings
+            tree["frontend"] = {
+                "w": P((cfg.d_model, cfg.d_model), ("embed", "embed2"))
+            }
+        return tree
+
+    def build_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        unit_cache = {
+            f"sub{i}_{kind}": tfm.build_block_cache(cfg, kind, batch, max_len, dtype)
+            for i, kind in enumerate(self.unit)
+        }
+        cache = {"blocks": pp.stack(unit_cache, self.n_units)}
+        if self.tail:
+            cache["tail"] = {
+                f"tail{i}_{kind}": tfm.build_block_cache(cfg, kind, batch,
+                                                         max_len, dtype)
+                for i, kind in enumerate(self.tail)
+            }
+        return cache
+
+    # ------------------------------------------------------------------
+    # Forward
+    # ------------------------------------------------------------------
+
+    def _unit_apply(self, unit_params, x, *, positions, ctx, cache,
+                    cache_index):
+        new_cache = {} if cache is not None else None
+        aux_sum = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(self.unit):
+            key = f"sub{i}_{kind}"
+            c = cache[key] if cache is not None else None
+            c = c if c else None  # empty dict => stateless block
+            x, nc, aux = tfm.block_apply(
+                unit_params[key], x, self.cfg, kind, positions=positions,
+                ctx=ctx, cache=c, cache_index=cache_index)
+            if cache is not None:
+                new_cache[key] = nc if nc is not None else {}
+            if "moe_aux" in aux:
+                aux_sum = aux_sum + aux["moe_aux"]
+        return x, new_cache, aux_sum
+
+    def _stack_apply(self, params, x, *, positions, ctx=None, cache=None,
+                     cache_index=None):
+        cfg = self.cfg
+
+        def unit_fn(x, unit_params, unit_cache):
+            return self._unit_apply(
+                unit_params, x, positions=positions, ctx=ctx,
+                cache=unit_cache, cache_index=cache_index)
+
+        if cfg.parallel.remat == "full":
+            unit_fn = jax.checkpoint(unit_fn)
+        elif cfg.parallel.remat == "dots":
+            unit_fn = jax.checkpoint(
+                unit_fn,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+
+        aux_total = jnp.zeros((), jnp.float32)
+        if cfg.parallel.scan_layers and self.n_units > 1:
+            if cache is not None:
+                def body(carry, xs):
+                    h, aux_acc = carry
+                    unit_params, unit_cache = xs
+                    h, nc, aux = unit_fn(h, unit_params, unit_cache)
+                    return (h, aux_acc + aux), nc
+
+                (x, aux_total), new_block_cache = jax.lax.scan(
+                    body, (x, aux_total), (params["blocks"], cache["blocks"]))
+            else:
+                def body(carry, unit_params):
+                    h, aux_acc = carry
+                    h, _, aux = unit_fn(h, unit_params, None)
+                    return (h, aux_acc + aux), None
+
+                (x, aux_total), _ = jax.lax.scan(
+                    body, (x, aux_total), params["blocks"])
+                new_block_cache = None
+        else:
+            new_caches = []
+            for i in range(self.n_units):
+                unit_params = jax.tree.map(lambda a: a[i], params["blocks"])
+                unit_cache = (jax.tree.map(lambda a: a[i], cache["blocks"])
+                              if cache is not None else None)
+                x, nc, aux = unit_fn(x, unit_params, unit_cache)
+                aux_total = aux_total + aux
+                new_caches.append(nc)
+            new_block_cache = (
+                jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+                if cache is not None else None)
+
+        new_cache = {"blocks": new_block_cache} if cache is not None else None
+
+        if self.tail:
+            if cache is not None:
+                new_cache["tail"] = {}
+            for i, kind in enumerate(self.tail):
+                key = f"tail{i}_{kind}"
+                c = cache["tail"][key] if cache is not None else None
+                c = c if c else None
+                x, nc, aux = tfm.block_apply(
+                    params["tail"][key], x, cfg, kind, positions=positions,
+                    ctx=ctx, cache=c, cache_index=cache_index)
+                aux_total = aux_total + aux.get("moe_aux", 0.0)
+                if cache is not None:
+                    new_cache["tail"][key] = nc if nc is not None else {}
+        return x, new_cache, aux_total
+
+    def apply(self, params, batch: Dict[str, jnp.ndarray], *, cache=None,
+              cache_index=None, last_only: bool = False):
+        """Forward pass. batch: tokens (B,S) [or frames], optional patches.
+
+        Returns (logits (B,S,V) — or (B,1,V) when last_only — new_cache,
+        aux). ``last_only`` unembeds just the final position (prefill: the
+        full-sequence logits are never needed, and the vocab-sharded
+        unembedding over 32k positions is pure waste).
+        """
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        if cfg.family == "encoder":
+            x = batch["frames"].astype(dt) @ params["frontend"]["w"].astype(dt)
+        else:
+            x = embed_apply(params["embed"], batch["tokens"], cfg)
+        s = x.shape[1]
+        if cache_index is None:
+            positions = jnp.arange(s, dtype=jnp.int32)
+        else:
+            positions = cache_index + jnp.arange(s, dtype=jnp.int32)
+        ctx = batch.get("patches")
+        if ctx is not None:
+            ctx = ctx.astype(dt)
+        x = constrain(x, ("batch", "seq", "embed"))
+        x, new_cache, aux = self._stack_apply(
+            params, x, positions=positions, ctx=ctx, cache=cache,
+            cache_index=cache_index)
+        if last_only:
+            x = x[:, -1:]
+        x = norm_apply(params["final_norm"], x, cfg)
+        logits = unembed_apply(params["embed"], x, cfg)
+        return logits, new_cache, aux
+
+    # ------------------------------------------------------------------
+    # Loss / serve
+    # ------------------------------------------------------------------
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        logits, _, aux = self.apply(params, batch)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        labels = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = -(ll * mask).sum() / denom
+        total = ce
+        if cfg.moe is not None:
+            total = total + cfg.moe.router_aux_weight * aux
+        metrics = {"loss": total, "ce": ce, "aux": aux,
+                   "accuracy": ((jnp.argmax(logits, -1) == labels)
+                                * mask).sum() / denom}
+        return total, metrics
+
+    def prefill(self, params, batch, cache):
+        """Process a full prompt, fill the cache, return last-token logits."""
+        logits, cache, _ = self.apply(params, batch, cache=cache,
+                                      cache_index=jnp.int32(0),
+                                      last_only=True)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, token, cache, index):
+        """One decode step. token: (B, 1) int32; index: scalar tokens-so-far."""
+        logits, cache, _ = self.apply(params, {"tokens": token}, cache=cache,
+                                      cache_index=index)
+        return logits[:, -1], cache
+
+    # ------------------------------------------------------------------
+    # Dry-run input specs
+    # ------------------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        b = shape.global_batch
+        s = shape.seq_len
+        dt = jnp.dtype(cfg.compute_dtype)
+        if shape.kind == "train":
+            if cfg.family == "encoder":
+                specs = {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                }
+            else:
+                specs = {
+                    "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                }
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vlm.n_patches, cfg.vlm.vision_dim), dt)
+            return specs
+        if shape.kind == "prefill":
+            if cfg.family == "encoder":
+                specs = {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+            else:
+                specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vlm.n_patches, cfg.vlm.vision_dim), dt)
+            return specs
+        if shape.kind == "decode":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vlm.n_patches, cfg.vlm.vision_dim), dt)
+            return specs
+        raise ValueError(shape.kind)

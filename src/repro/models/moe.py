@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN: top-k routing, GShard-style capacity dispatch,
+optional shared (always-on) experts — covers Qwen2-MoE (60e top-4 + 4 shared,
+fine-grained d_ff) and DBRX (16e top-4).
+
+Expert parallelism: dispatch/combine einsums are annotated with the 'expert'
+logical axis; the sharding rules map it to the mesh 'model' axis when the
+expert count divides it (EP), otherwise experts keep their hidden dim sharded
+(TP). Router math in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.qat import maybe_quant
+from repro.models.layers import _act
+from repro.models.params import P
+
+
+def _expert_dff(cfg: ArchConfig) -> int:
+    return cfg.moe.d_ff_expert or cfg.d_ff
+
+
+def build_moe(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    e = cfg.moe.e_total  # includes EP-divisibility padding
+    f = _expert_dff(cfg)
+    p = {
+        "router": P((d, e), ("embed", "expert"), scale=0.02),
+        "wi": P((e, d, f), ("expert", "embed", "mlp")),
+        "wo": P((e, f, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.glu:
+        p["wg"] = P((e, d, f), ("expert", "embed", "mlp"))
+    if cfg.moe.n_shared:
+        fs = f * cfg.moe.n_shared
+        p["shared_wi"] = P((d, fs), ("embed", "mlp"))
+        p["shared_wo"] = P((fs, d), ("mlp", "embed"))
+        if cfg.glu:
+            p["shared_wg"] = P((d, fs), ("embed", "mlp"))
+    return p
+
+
+def _quant(w, cfg: ArchConfig):
+    if isinstance(w, dict) and "mask_planes" in w:  # packed serving leaf
+        from repro.serve.quantized import dequant_leaf
+
+        return dequant_leaf(w, dtype=jnp.dtype(cfg.compute_dtype),
+                            consecutive=cfg.quant.cfg.method == "swis_c")
+    if w.ndim == 3:  # per-expert: quantize each expert matrix independently
+        if cfg.quant.cfg.method == "none" or cfg.quant.mode == "off":
+            return w
+        return jax.vmap(lambda m: maybe_quant(m, cfg.quant.cfg, cfg.quant.mode))(w)
+    return maybe_quant(w, cfg.quant.cfg, cfg.quant.mode)
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig):
+    """x: (B, S, D) -> (y, aux_metrics)."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    e = mc.n_experts
+    f = _expert_dff(cfg)
+    dt = x.dtype
+
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+
+    e_total = mc.e_total
+
+    if s == 1:
+        # Decode: dropless dense dispatch (capacity dropping at batch-1
+        # token counts would diverge from training numerics). T is small.
+        logits = tokens.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+        if e_total > e:
+            logits = logits.at[:, e:].set(-1e30)  # padded experts: unroutable
+        probs = jax.nn.softmax(logits, axis=-1)  # (t, e)
+        gate_vals, gate_idx = jax.lax.top_k(probs, mc.top_k)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+        comb = jnp.zeros((t, e_total), jnp.float32).at[
+            jnp.arange(t)[:, None], gate_idx].add(gate_vals)
+        wi = _quant(p["wi"], cfg).astype(dt)
+        h = jnp.einsum("td,edf->tef", tokens, wi)
+        h = _act(h, cfg.act)
+        if "wg" in p:
+            wg = _quant(p["wg"], cfg).astype(dt)
+            h = h * jnp.einsum("td,edf->tef", tokens, wg)
+        wo = _quant(p["wo"], cfg).astype(dt)
+        ye = jnp.einsum("tef,efd->ted", h, wo)
+        y = jnp.einsum("te,ted->td", comb.astype(dt), ye)
+        if "shared_wi" in p:
+            hs = _act(tokens @ _quant(p["shared_wi"], cfg).astype(dt), cfg.act)
+            if "shared_wg" in p:
+                hs = hs * (tokens @ _quant(p["shared_wg"], cfg).astype(dt))
+            y = y + hs @ _quant(p["shared_wo"], cfg).astype(dt)
+        return y.reshape(b, s, d), {"moe_aux": jnp.zeros((), jnp.float32)}
+
+    gs = min(mc.group_tokens, t)
+    if t % gs:
+        gs = t  # fall back to one group (smoke-scale inputs)
+    g = t // gs
+    xt = tokens.reshape(g, gs, d)
+
+    # --- Router (fp32) ---
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    if e_total > e:
+        logits = jnp.concatenate(
+            [logits[..., :e], jnp.full_like(logits[..., e:], -1e30)], axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1)  # (g, gs, e_total)
+    gate_vals, gate_idx = jax.lax.top_k(probs, mc.top_k)  # (g, gs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- Capacity + position bookkeeping (GShard) ---
+    cap = max(int(gs * mc.top_k * mc.capacity_factor / e), 1)
+    onehot = jax.nn.one_hot(gate_idx, e_total, dtype=jnp.float32)
+    # priority: k-th choice of earlier tokens first
+    flat = onehot.transpose(0, 2, 1, 3).reshape(g, mc.top_k * gs, e_total)
+    pos = jnp.cumsum(flat, axis=1) - flat  # position within expert
+    keep = pos < cap
+    flat = flat * keep
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32) * flat[..., None]
+    pos_oh = pos_oh.reshape(g, mc.top_k, gs, e_total, cap).transpose(0, 2, 1, 3, 4)
+    # (g, gs, e, cap) combine weights; dispatch mask
+    combine = (gate_vals[..., None, None] * pos_oh).sum(axis=2)
+    dispatch = (combine > 0).astype(dt)
+
+    # --- Expert computation (EP-shardable einsums) ---
+    xd = jnp.einsum("gsec,gsd->egcd", dispatch, xt)  # (e, g, cap, d)
+    wi = _quant(p["wi"], cfg).astype(dt)
+    h = jnp.einsum("egcd,edf->egcf", xd, wi)
+    h = _act(h, cfg.act)
+    if "wg" in p:
+        wg = _quant(p["wg"], cfg).astype(dt)
+        h = h * jnp.einsum("egcd,edf->egcf", xd, wg)
+    wo = _quant(p["wo"], cfg).astype(dt)
+    yo = jnp.einsum("egcf,efd->egcd", h, wo)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(dt), yo)
+
+    # --- Shared experts ---
+    if "shared_wi" in p:
+        hs = _act(xt @ _quant(p["shared_wi"], cfg).astype(dt), cfg.act)
+        if "shared_wg" in p:
+            hs = hs * (xt @ _quant(p["shared_wg"], cfg).astype(dt))
+        y = y + hs @ _quant(p["shared_wo"], cfg).astype(dt)
+
+    # --- Aux load-balancing loss (Switch-style) ---
+    density = flat.reshape(g, mc.top_k, gs, e_total).sum(axis=(1, 2)) / gs
+    router_prob = probs.mean(axis=1)  # (g, e)
+    aux = (density * router_prob).sum(-1).mean() * e
+
+    return y.reshape(b, s, d), {"moe_aux": aux}

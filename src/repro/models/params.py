@@ -1,0 +1,95 @@
+"""Parameter placeholder trees.
+
+Model ``build_*`` functions return trees of :class:`P` placeholders (shape +
+logical axes + initializer). Materializers turn one placeholder tree into
+
+* concrete parameters (:func:`init_params`),
+* ``jax.ShapeDtypeStruct`` stand-ins (:func:`abstract_params`, dry-run),
+* ``PartitionSpec`` trees (:mod:`repro.parallel.sharding`),
+
+so the parameter tree and its sharding tree are congruent by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == ndim
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'embed'
+    scale: Optional[float] = None  # stddev override for 'normal'
+    dtype: Any = None  # param dtype override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_placeholder(x) -> bool:
+    return isinstance(x, P)
+
+
+def stack(tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked-layers axis to every placeholder in the tree."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (axis_name,) + p.axes, p.init, p.scale, p.dtype),
+        tree,
+        is_leaf=is_placeholder,
+    )
+
+
+def _leaf_rng(root: jax.Array, path) -> jax.Array:
+    key = root
+    for part in path:
+        token = getattr(part, "key", None) or str(getattr(part, "idx", part))
+        key = jax.random.fold_in(key, np.uint32(abs(hash(token)) % (2 ** 31)))
+    return key
+
+
+def init_params(tree, rng: jax.Array, dtype=jnp.float32):
+    """Materialize a placeholder tree into concrete parameters."""
+
+    def make(path, p: P):
+        dt = p.dtype or dtype
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dt)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dt)
+        if p.init == "fill":
+            return jnp.full(p.shape, p.scale, dt)
+        key = _leaf_rng(rng, path)
+        if p.init == "embed":
+            std = p.scale if p.scale is not None else 1.0
+            return (jax.random.normal(key, p.shape) * std).astype(dt)
+        # fan-in scaled truncated-normal-ish init
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = p.scale if p.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, p.shape) * std).astype(dt)
+
+    return jax.tree_util.tree_map_with_path(make, tree, is_leaf=is_placeholder)
+
+
+def abstract_params(tree, dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins (no allocation) — dry-run path."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype or dtype),
+        tree,
+        is_leaf=is_placeholder,
+    )
+
+
+def map_placeholders(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_placeholder)
+
+
+def count_params(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_placeholder):
+        total += int(np.prod(leaf.shape))
+    return total

@@ -1,0 +1,119 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427).
+
+Recurrence:  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+with         a_t = exp(-c * softplus(Λ) * σ(W_a x_t)),  i_t = σ(W_x x_t).
+
+Training/prefill uses ``jax.lax.associative_scan`` (parallel, O(log L) depth);
+decode keeps the O(1) per-token recurrent state — together with the bounded
+local-attention window this makes the arch sub-quadratic (long_500k shape).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense
+from repro.models.params import P
+from repro.models.ssm import _causal_conv
+
+
+def _n_blocks(cfg: ArchConfig) -> int:
+    # Griffin uses block-diagonal RG-LRU gate matrices (one block per head).
+    gc = cfg.griffin
+    nb = cfg.n_heads
+    while gc.lru_width % nb:
+        nb -= 1
+    return nb
+
+
+def build_rglru_block(cfg: ArchConfig) -> dict:
+    gc = cfg.griffin
+    d, w = cfg.d_model, gc.lru_width
+    nb = _n_blocks(cfg)
+    bs = w // nb
+    return {
+        "in_x": {"w": P((d, w), ("embed", "mlp"))},
+        "in_gate": {"w": P((d, w), ("embed", "mlp"))},
+        "conv_w": P((gc.conv_width, w), (None, "mlp")),
+        "gate_a": P((nb, bs, bs), ("heads", None, None)),
+        "gate_x": P((nb, bs, bs), ("heads", None, None)),
+        "lambda_raw": P((w,), ("mlp",), init="ones"),
+        "out": {"w": P((w, d), ("mlp", "embed"))},
+    }
+
+
+def _block_gate(w_blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Block-diagonal matmul: x (B, L, W) @ blockdiag(w_blocks (NB, BS, BS))."""
+    b, l, w = x.shape
+    nb, bs, _ = w_blocks.shape
+    xb = x.reshape(b, l, nb, bs)
+    y = jnp.einsum("blni,nij->blnj", xb, w_blocks.astype(x.dtype))
+    return y.reshape(b, l, w)
+
+
+def build_rglru_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    gc = cfg.griffin
+    return {
+        "h": P((batch, gc.lru_width), ("batch", "mlp"), init="zeros",
+               dtype=jnp.float32),
+        "conv": P((batch, gc.conv_width - 1, gc.lru_width),
+                  ("batch", None, "mlp"), init="zeros", dtype=dtype),
+    }
+
+
+def _rglru_scan(log_a: jnp.ndarray, b: jnp.ndarray,
+                h0: Optional[jnp.ndarray]):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t via associative scan over axis 1."""
+    if h0 is not None:
+        # fold the initial state into step 0: h_0 = exp(log_a_0)*h0 + b_0
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(left, right):
+        la, ba = left
+        lb, bb = right
+        return la + lb, jnp.exp(lb) * ba + bb
+
+    log_acc, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rglru_apply(
+    p: dict,
+    x: jnp.ndarray,  # (B, L, D)
+    cfg: ArchConfig,
+    cache: Optional[dict] = None,
+):
+    """Griffin recurrent block. Returns (y (B,L,D), new_cache_or_None)."""
+    gc = cfg.griffin
+    b, l, _ = x.shape
+    f32 = jnp.float32
+
+    gate_branch = jax.nn.gelu(dense(p["in_gate"], x, cfg))
+    xb = dense(p["in_x"], x, cfg)
+    xb, new_conv = _causal_conv(
+        xb, p["conv_w"], None if cache is None else cache["conv"])
+
+    # RG-LRU gates (block-diagonal; fp32 recurrence)
+    r = jax.nn.sigmoid(_block_gate(p["gate_a"], xb).astype(f32))
+    i = jax.nn.sigmoid(_block_gate(p["gate_x"], xb).astype(f32))
+    log_lambda = -jax.nn.softplus(p["lambda_raw"].astype(f32))  # log a_base < 0
+    log_a = gc.lru_c * log_lambda[None, None, :] * r  # (B, L, W) log decay
+    a2 = jnp.exp(2.0 * log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * i * xb.astype(f32)
+
+    if cache is None:
+        h = _rglru_scan(log_a, gated_in, None)
+        new_cache = None
+    elif l == 1:
+        h = jnp.exp(log_a[:, 0]) * cache["h"] + gated_in[:, 0]
+        new_cache = {"h": h, "conv": new_conv}
+        h = h[:, None]
+    else:  # chunked prefill with carried state
+        h = _rglru_scan(log_a, gated_in, cache["h"])
+        new_cache = {"h": h[:, -1], "conv": new_conv}
+
+    y = h.astype(x.dtype) * gate_branch
+    return dense(p["out"], y, cfg), new_cache

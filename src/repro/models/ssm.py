@@ -1,0 +1,214 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm for training/prefill (sub-quadratic: O(L * chunk) +
+O(L/chunk) state recurrence) and an O(1)-state recurrent step for decode —
+this is the arch that carries the ``long_500k`` shape.
+
+SWIS quantization applies to the in/out projections (GEMMs); the scan itself
+is elementwise/small-tensor state math (noted in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, norm_apply
+from repro.models.params import P
+
+
+def _dims(cfg: ArchConfig):
+    mc = cfg.mamba2
+    d_inner = mc.expand * cfg.d_model
+    n_heads = d_inner // mc.head_dim
+    return d_inner, n_heads, mc.d_state, mc.head_dim
+
+
+def build_mamba(cfg: ArchConfig) -> dict:
+    mc = cfg.mamba2
+    d = cfg.d_model
+    d_inner, n_heads, d_state, _ = _dims(cfg)
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "in_proj": {"w": P((d, 2 * d_inner + 2 * d_state + n_heads),
+                           ("embed", "mlp"))},
+        "conv_w": P((mc.conv_width, conv_dim), (None, "mlp")),
+        "A_log": P((n_heads,), (None,), init="zeros"),
+        "D": P((n_heads,), (None,), init="ones"),
+        "dt_bias": P((n_heads,), (None,), init="zeros"),
+        "out_norm": {"scale": P((d_inner,), ("mlp",), init="ones")},
+        "out_proj": {"w": P((d_inner, d), ("mlp", "embed"))},
+    }
+
+
+def build_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    mc = cfg.mamba2
+    d_inner, n_heads, d_state, head_dim = _dims(cfg)
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "ssm": P((batch, n_heads, head_dim, d_state),
+                 ("batch", "heads", None, None), init="zeros", dtype=jnp.float32),
+        "conv": P((batch, mc.conv_width - 1, conv_dim),
+                  ("batch", None, "mlp"), init="zeros", dtype=dtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable 'segment sum': out[..., i, j] = sum_{k in (j, i]} x[..., k].
+
+    Lower-triangular (i >= j); -inf above the diagonal.
+    """
+    t = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    out = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H) — post-softplus
+    a_neg: jnp.ndarray,  # (H,) == -exp(A_log)  (negative decay rates)
+    b_mat: jnp.ndarray,  # (B, L, N)
+    c_mat: jnp.ndarray,  # (B, L, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+):
+    """Chunked SSD (Mamba-2 alg. 1). Returns (y (B,L,H,P), final_state)."""
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    xb = (x * dt[..., None]).reshape(bsz, nc, q, h, p)  # fold dt into x
+    ab = (dt * a_neg[None, None, :]).reshape(bsz, nc, q, h)  # log-decay per step
+    bb = b_mat.reshape(bsz, nc, q, n)
+    cb = c_mat.reshape(bsz, nc, q, n)
+
+    ab_hl = ab.transpose(0, 1, 3, 2)  # (B, NC, H, Q)
+    a_cum = jnp.cumsum(ab_hl, axis=-1)  # cumulative log decay within chunk
+
+    # 1) Intra-chunk (diagonal blocks): Y_diag = (C B^T ⊙ L) X
+    l_mat = jnp.exp(_segsum(ab_hl))  # (B, NC, H, Q, Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cb, bb)  # (B, NC, Q, Q)
+    y_diag = jnp.einsum("bchqk,bcqk,bckhp->bcqhp", l_mat, scores, xb)
+
+    # 2) Chunk summaries: state contributed by each chunk
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B, NC, H, Q)
+    states = jnp.einsum("bckn,bchk,bckhp->bchpn", bb, decay_states, xb)
+
+    # 3) Inter-chunk recurrence over chunk summaries
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B, NC, H)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, NC, H, P, N)
+
+    # 4) Chunk-input contribution: Y_off = C ⊙ decay_in @ prev_state
+    decay_out = jnp.exp(a_cum)  # (B, NC, H, Q)
+    y_off = jnp.einsum("bcqn,bchq,bchpn->bcqhp",
+                       cb, decay_out, prev_states.astype(cb.dtype))
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,  # (B, 1, H, P)
+    dt: jnp.ndarray,  # (B, 1, H)
+    a_neg: jnp.ndarray,  # (H,)
+    b_mat: jnp.ndarray,  # (B, 1, N)
+    c_mat: jnp.ndarray,  # (B, 1, N)
+    state: jnp.ndarray,  # (B, H, P, N) fp32
+):
+    da = jnp.exp(dt[:, 0, :, None, None] * a_neg[None, :, None, None])
+    upd = jnp.einsum("bhp,bn->bhpn", (x * dt[..., None])[:, 0],
+                     b_mat[:, 0]).astype(jnp.float32)
+    new_state = state * da + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state.astype(c_mat.dtype), c_mat[:, 0])
+    return y[:, None], new_state
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv along L. x: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    if cache is not None:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = xp[:, -(k - 1):] if k > 1 else cache
+    else:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_cache = None
+    out = jnp.zeros_like(x)
+    l = x.shape[1]
+    for i in range(k):
+        out = out + xp[:, i : i + l] * w[i][None, None, :]
+    return out, new_cache
+
+
+def mamba_apply(
+    p: dict,
+    x: jnp.ndarray,  # (B, L, D)
+    cfg: ArchConfig,
+    cache: Optional[dict] = None,
+):
+    """Returns (y (B,L,D), new_cache_or_None)."""
+    mc = cfg.mamba2
+    d_inner, n_heads, d_state, head_dim = _dims(cfg)
+    b, l, _ = x.shape
+    dt_f = jnp.float32
+
+    zxbcdt = dense(p["in_proj"], x, cfg)
+    z, xc, bc, cc, dt_raw = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state],
+        axis=-1,
+    )
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"], None if cache is None else cache["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, bc, cc = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(dt_f) + p["dt_bias"].astype(dt_f))
+    a_neg = -jnp.exp(p["A_log"].astype(dt_f))
+    xh = xc.reshape(b, l, n_heads, head_dim)
+
+    if cache is not None and l == 1:
+        y, new_state = ssd_decode_step(xh.astype(dt_f), dt, a_neg,
+                                       bc.astype(dt_f), cc.astype(dt_f),
+                                       cache["ssm"])
+        new_cache = {"ssm": new_state, "conv": new_conv}
+    else:
+        # train / prefill: pad L to a chunk multiple with dt=0 steps (decay 1,
+        # zero input => state unaffected; padded outputs are sliced off).
+        pad = (-l) % min(mc.chunk, l)
+        xh_p = jnp.pad(xh.astype(dt_f), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bc_p = jnp.pad(bc.astype(dt_f), ((0, 0), (0, pad), (0, 0)))
+        cc_p = jnp.pad(cc.astype(dt_f), ((0, 0), (0, pad), (0, 0)))
+        init = cache["ssm"] if cache is not None else None
+        y, final_state = ssd_chunked(xh_p, dt_p, a_neg, bc_p, cc_p, mc.chunk,
+                                     init_state=init)
+        y = y[:, :l]
+        new_cache = ({"ssm": final_state, "conv": new_conv}
+                     if cache is not None else None)
+
+    y = y + xh.astype(dt_f) * p["D"].astype(dt_f)[None, None, :, None]
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)  # gated output
+    y = norm_apply(p["out_norm"], y, cfg)
+    return dense(p["out_proj"], y, cfg), new_cache

@@ -1,0 +1,170 @@
+"""Block assembly: every architecture family is a repeating *pattern unit* of
+sub-blocks, scanned over the depth axis (bounded HLO for 88-layer models),
+with any remainder layers unrolled as a tail.
+
+Kinds:
+  attn        pre-norm self-attention + MLP              (dense / vlm self)
+  enc         bidirectional self-attention + MLP         (hubert)
+  attn_local  sliding-window self-attention + MLP        (griffin 1:2 pattern)
+  moe         self-attention + mixture-of-experts FFN    (qwen2-moe / dbrx)
+  rec         RG-LRU temporal-mix + MLP                  (griffin)
+  mamba       Mamba-2 SSD mixer (no MLP)                 (mamba2)
+  self_cross  self-attn + gated cross-attn + MLP         (llama-3.2-vision)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import build_mlp, build_norm, mlp_apply, norm_apply
+from repro.models.params import P
+from repro.parallel.ctx import constrain
+
+
+def pattern_for(cfg: ArchConfig) -> Tuple[str, ...]:
+    if cfg.family == "dense":
+        return ("attn",)
+    if cfg.family == "moe":
+        return ("moe",)
+    if cfg.family == "griffin":
+        return cfg.griffin.pattern
+    if cfg.family == "mamba2":
+        return ("mamba",)
+    if cfg.family == "encoder":
+        return ("enc",)
+    if cfg.family == "vlm":
+        n = cfg.vlm.cross_every
+        return ("attn",) * (n - 1) + ("self_cross",)
+    raise ValueError(cfg.family)
+
+
+def build_block(cfg: ArchConfig, kind: str) -> dict:
+    d = cfg.d_model
+    if kind in ("attn", "enc", "attn_local"):
+        return {
+            "ln1": build_norm(d),
+            "attn": attn_mod.build_attention(cfg),
+            "ln2": build_norm(d),
+            "mlp": build_mlp(cfg),
+        }
+    if kind == "moe":
+        return {
+            "ln1": build_norm(d),
+            "attn": attn_mod.build_attention(cfg),
+            "ln2": build_norm(d),
+            "moe": moe_mod.build_moe(cfg),
+        }
+    if kind == "rec":
+        return {
+            "ln1": build_norm(d),
+            "rec": rglru_mod.build_rglru_block(cfg),
+            "ln2": build_norm(d),
+            "mlp": build_mlp(cfg),
+        }
+    if kind == "mamba":
+        return {"ln": build_norm(d), "mixer": ssm_mod.build_mamba(cfg)}
+    if kind == "self_cross":
+        return {
+            "ln1": build_norm(d),
+            "attn": attn_mod.build_attention(cfg),
+            "lnx": build_norm(d),
+            "xattn": attn_mod.build_attention(cfg, kind="cross"),
+            "xgate": P((), (), init="zeros"),
+            "ln2": build_norm(d),
+            "mlp": build_mlp(cfg),
+        }
+    raise ValueError(kind)
+
+
+def build_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                      dtype) -> dict:
+    if kind in ("attn", "moe", "self_cross"):
+        c = attn_mod.build_cache(cfg, batch, max_len, dtype)
+    elif kind == "attn_local":
+        c = attn_mod.build_cache(cfg, batch, min(max_len, cfg.griffin.window),
+                                 dtype)
+    elif kind == "rec":
+        return rglru_mod.build_rglru_cache(cfg, batch, dtype)
+    elif kind == "mamba":
+        return ssm_mod.build_mamba_cache(cfg, batch, dtype)
+    elif kind == "enc":
+        return {}
+    else:
+        raise ValueError(kind)
+    cache_len = c["k"].shape[1]
+    # position slots start invalid (-1) so unwritten cache entries are masked
+    c["pos"] = P((cache_len,), ("kv_seq",), init="fill", scale=-1,
+                 dtype=jnp.int32)
+    return c
+
+
+def block_apply(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    kind: str,
+    *,
+    positions: jnp.ndarray,
+    ctx: Optional[jnp.ndarray] = None,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+):
+    """Returns (x, new_cache, aux)."""
+    aux = {}
+    new_cache = None
+
+    if kind == "mamba":
+        h, new_cache = ssm_mod.mamba_apply(
+            p["mixer"], norm_apply(p["ln"], x, cfg), cfg, cache)
+        x = x + h
+        x = constrain(x, ("batch", "seq", "embed"))
+        return x, new_cache, aux
+
+    if kind == "rec":
+        h, new_cache = rglru_mod.rglru_apply(
+            p["rec"], norm_apply(p["ln1"], x, cfg), cfg, cache)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x, cfg), cfg)
+        x = constrain(x, ("batch", "seq", "embed"))
+        return x, new_cache, aux
+
+    causal = cfg.causal and kind != "enc"
+    window = cfg.griffin.window if kind == "attn_local" else None
+    h, new_cache = attn_mod.attention_apply(
+        p["attn"],
+        norm_apply(p["ln1"], x, cfg),
+        cfg,
+        positions=positions,
+        causal=causal,
+        window=window,
+        cache=cache,
+        cache_index=cache_index,
+    )
+    x = x + h
+
+    if kind == "self_cross" and ctx is not None:
+        hx, _ = attn_mod.attention_apply(
+            p["xattn"],
+            norm_apply(p["lnx"], x, cfg),
+            cfg,
+            positions=positions,
+            causal=False,
+            ctx=ctx,
+        )
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * hx
+
+    if kind == "moe":
+        h, aux = moe_mod.moe_apply(p["moe"], norm_apply(p["ln2"], x, cfg), cfg)
+        x = x + h
+    else:
+        x = x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x, cfg), cfg)
+
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux

@@ -1,0 +1,9 @@
+"""Pure-JAX optimizer substrate (no optax dependency)."""
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine, warmup_linear
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compress import quantize_grads_int8, dequantize_grads, compressed_allreduce
+
+__all__ = ["AdamW", "warmup_cosine", "warmup_linear", "clip_by_global_norm",
+           "global_norm", "quantize_grads_int8", "dequantize_grads",
+           "compressed_allreduce"]

@@ -1,0 +1,52 @@
+"""Gradient compression for cross-pod reduction.
+
+``quantize_grads_int8`` / ``dequantize_grads`` implement per-leaf absmax int8
+quantization. ``compressed_allreduce`` is the shard_map building block for a
+bandwidth-compressed cross-pod all-reduce: each pod all-gathers the int8
+payload (1 byte/element instead of 4) and sums locally in fp32. At 2 pods
+this is ~2x the bytes of a perfect ring all-reduce segment but 4x smaller
+elements => ~2x net wire saving; at P pods the saving is 4/P per hop against
+ring all-reduce, so it is enabled (cfg.parallel.grad_compress) for the
+pod axis only, where links are the scarce resource.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_grads_int8(tree):
+    """Per-leaf symmetric int8 quantization. Returns (q_tree, scale_tree)."""
+
+    def q(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        qv = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        return qv, scale
+
+    flat = jax.tree.map(q, tree)
+    qt = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    st = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return qt, st
+
+
+def dequantize_grads(q_tree, scale_tree):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, q_tree,
+                        scale_tree)
+
+
+def compressed_allreduce(x: jnp.ndarray, axis_name: str):
+    """Mean over ``axis_name`` with int8-compressed payload.
+
+    Call inside shard_map. Each participant quantizes its shard, all-gathers
+    the int8 payload + fp32 scale, and averages locally in fp32.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    qs = jax.lax.all_gather(q, axis_name)  # (P, ...) int8  — compressed wire
+    ss = jax.lax.all_gather(scale, axis_name)  # (P,) fp32
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+    return deq.mean(axis=0).astype(x.dtype)

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (callables of the step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.0):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (s + 1.0) / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def warmup_linear(peak_lr: float, warmup: int, total: int, floor: float = 0.0):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (s + 1.0) / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        lin = peak_lr + (floor - peak_lr) * frac
+        return jnp.where(s < warmup, warm, lin)
+
+    return lr

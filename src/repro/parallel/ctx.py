@@ -1,0 +1,31 @@
+"""Active-sharding context: model code annotates activations with *logical*
+axes via :func:`constrain`; the launcher installs concrete rules (mesh +
+logical->mesh mapping) around tracing. With no active rules (CPU unit tests)
+constraints are no-ops, so model code never depends on a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_rules(rules):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def active_rules():
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x, logical_axes):
+    rules = active_rules()
+    if rules is None:
+        return x
+    return rules.constrain(x, logical_axes)

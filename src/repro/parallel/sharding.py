@@ -1,0 +1,161 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / SP / EP).
+
+Model code tags parameters and activations with *logical* axis names; a
+:class:`Rules` instance maps them to mesh axes with automatic divisibility
+fallback (an axis that does not divide the dimension is dropped rather than
+erroring — e.g. 8 KV heads on a 16-way model axis fall back to replication
+and the KV cache picks up sequence sharding instead).
+
+Default mapping (single-pod mesh ('data','model') / multi-pod
+('pod','data','model')):
+
+  batch            -> ('pod','data')   pure DP across pods
+  vocab/heads/mlp/
+  q_proj/kv_proj   -> 'model'          tensor parallelism
+  expert           -> 'model'          expert parallelism (divisible MoE)
+  seq              -> 'model'          sequence parallelism between blocks
+  kv_seq           -> 'model'          decode KV-cache sharding
+  embed/layers/...  -> replicated
+
+FSDP: optimizer state (and optionally params) are additionally sharded over
+'data' on the first still-unsharded divisible dimension (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ArchConfig
+from repro.models.params import P, is_placeholder
+
+DEFAULT_MAPPING = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "q_proj": ("model",),
+    "kv_proj": ("model",),
+    "mlp": ("model",),
+    "mlp2": None,
+    "expert": ("model",),
+    "seq": ("model",),
+    "kv_seq": ("model",),
+    "embed": None,
+    "embed2": None,
+    "head_dim": None,
+    "layers": None,
+}
+
+
+@dataclasses.dataclass
+class Rules:
+    mesh: Mesh
+    mapping: dict
+    fsdp_axis: str = "data"
+
+    @classmethod
+    def for_arch(cls, mesh: Mesh, cfg: Optional[ArchConfig] = None,
+                 overrides: Optional[dict] = None) -> "Rules":
+        mapping = dict(DEFAULT_MAPPING)
+        if cfg is not None and not cfg.parallel.sp:
+            mapping["seq"] = None
+        if overrides:
+            mapping.update(overrides)
+        return cls(mesh=mesh, mapping=mapping)
+
+    # ------------------------------------------------------------------
+
+    def _axis_size(self, name: str) -> int:
+        return int(self.mesh.shape[name]) if name in self.mesh.shape else 0
+
+    def spec_for(self, axes, shape) -> PartitionSpec:
+        """Logical axes -> PartitionSpec with divisibility fallback."""
+        used = set()
+        out = []
+        for dim, ax in zip(shape, axes):
+            entry = self.mapping.get(ax) if ax is not None else None
+            if entry is None:
+                out.append(None)
+                continue
+            names = (entry,) if isinstance(entry, str) else tuple(entry)
+            names = [n for n in names if self._axis_size(n) and n not in used]
+            total = int(np.prod([self._axis_size(n) for n in names])) if names else 0
+            if not names or dim % max(total, 1):
+                # try progressively smaller prefixes (e.g. drop 'pod')
+                while names and dim % int(np.prod([self._axis_size(n) for n in names])):
+                    names = names[:-1]
+            if not names:
+                out.append(None)
+                continue
+            used.update(names)
+            out.append(tuple(names) if len(names) > 1 else names[0])
+        return PartitionSpec(*out)
+
+    def sharding_for(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+    def constrain(self, x, logical_axes):
+        if len(logical_axes) != x.ndim:
+            raise ValueError(f"axes {logical_axes} vs shape {x.shape}")
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding_for(logical_axes, x.shape))
+
+    # ------------------------------------------------------------------
+
+    def param_specs(self, tree, fsdp: bool = False):
+        """PartitionSpec tree for a placeholder tree."""
+
+        def one(p: P):
+            spec = self.spec_for(p.axes, p.shape)
+            if fsdp:
+                spec = self._fsdp_spec(spec, p.shape)
+            return spec
+
+        return jax.tree.map(one, tree, is_leaf=is_placeholder)
+
+    def param_shardings(self, tree, fsdp: bool = False):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_specs(tree, fsdp=fsdp))
+
+    def _fsdp_spec(self, spec: PartitionSpec, shape) -> PartitionSpec:
+        """Shard the first unsharded divisible dim over the data axis."""
+        n = self._axis_size(self.fsdp_axis)
+        if not n:
+            return spec
+        used = set()
+        for e in spec:
+            if e is None:
+                continue
+            used.update((e,) if isinstance(e, str) else e)
+        if self.fsdp_axis in used:
+            return spec
+        entries = list(spec)
+        best = -1
+        for i, (dim, e) in enumerate(zip(shape, entries)):
+            if e is None and dim % n == 0 and dim >= n:
+                if best < 0 or shape[i] > shape[best]:
+                    best = i
+        if best < 0:
+            return spec
+        entries[best] = self.fsdp_axis
+        return PartitionSpec(*entries)
+
+    # ------------------------------------------------------------------
+
+    def batch_specs(self, batch_tree):
+        """Input-batch shardings: leading dim is the (global) batch."""
+
+        def one(x):
+            shape = x.shape
+            axes = ("batch",) + (None,) * (len(shape) - 1)
+            return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+        return jax.tree.map(one, batch_tree)
+
+    def replicated(self):
+        return NamedSharding(self.mesh, PartitionSpec())

@@ -1,0 +1,8 @@
+"""Paper-faithful analytical performance model: bit-serial systolic array
+(SCALE-Sim-like OS dataflow) with the paper's 28nm PE synthesis constants."""
+from repro.perfmodel.pe import PEConfig, PE_LIBRARY
+from repro.perfmodel.systolic import SystolicArray, LayerShape, simulate_layer, simulate_network
+from repro.perfmodel.networks import NETWORKS
+
+__all__ = ["PEConfig", "PE_LIBRARY", "SystolicArray", "LayerShape",
+           "simulate_layer", "simulate_network", "NETWORKS"]

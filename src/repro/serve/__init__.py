@@ -1,0 +1,4 @@
+from repro.serve.engine import DecodeEngine
+from repro.serve.quantized import pack_tree, packed_stats
+
+__all__ = ["DecodeEngine", "pack_tree", "packed_stats"]

@@ -1,0 +1,79 @@
+"""Batched decode engine: prefill + greedy/temperature decode over a ring KV
+cache, with optional SWIS-packed weights (the paper's compressed serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.swis import QuantConfig
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve.quantized import pack_tree
+
+
+@dataclasses.dataclass
+class DecodeEngine:
+    cfg: ArchConfig
+    params: Any
+    max_len: int = 256
+    batch: int = 1
+    packed: bool = False
+    quant_cfg: Optional[QuantConfig] = None
+    cache_dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        self.model = Model(self.cfg)
+        self.pack_stats = None
+        if self.packed:
+            qcfg = self.quant_cfg or self.cfg.quant.cfg
+            self.params, self.pack_stats = pack_tree(self.params, qcfg)
+            # record the pack method so dense()/moe dispatch the right
+            # (consecutive vs sparse) unpack semantics
+            from repro.configs.base import QuantPolicy
+
+            self.cfg = self.cfg.replace(
+                quant=QuantPolicy(cfg=qcfg, mode="off"))
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+
+    def new_cache(self):
+        tree = self.model.build_cache(self.batch, self.max_len,
+                                      self.cache_dtype)
+        return pp.init_params(tree, jax.random.key(0))
+
+    def generate(self, prompt: np.ndarray, n_tokens: int,
+                 extra: Optional[Dict[str, Any]] = None,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """prompt: (B, S0) int32. Returns (B, S0 + n_tokens)."""
+        b, s0 = prompt.shape
+        assert b == self.batch and s0 + n_tokens <= self.max_len
+        cache = self.new_cache()
+        batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
+        if extra:
+            batch.update({k: jnp.asarray(v) for k, v in extra.items()})
+        logits, cache = self._prefill(self.params, batch, cache)
+        rng = jax.random.key(seed)
+        out = [jnp.asarray(prompt, jnp.int32)]
+        tok = self._sample(logits, rng, temperature, 0)
+        for i in range(n_tokens):
+            out.append(tok)
+            if i == n_tokens - 1:
+                break
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(s0 + i))
+            tok = self._sample(logits, rng, temperature, i + 1)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    @staticmethod
+    def _sample(logits, rng, temperature, i):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(rng, i)
+        return jax.random.categorical(
+            k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)

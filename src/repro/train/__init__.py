@@ -1,0 +1,4 @@
+from repro.train.steps import TrainState, make_train_step, make_eval_step
+from repro.train.loop import Trainer
+
+__all__ = ["TrainState", "make_train_step", "make_eval_step", "Trainer"]

@@ -1,0 +1,149 @@
+"""Fault-tolerant training loop.
+
+Responsibilities:
+  * jit the train step with explicit state/batch shardings (when a mesh is
+    given) and buffer donation,
+  * checkpoint every ``ckpt_every`` steps (async), storing the data cursor +
+    model RNG so a restart resumes bit-exactly,
+  * restart semantics: ``Trainer(..., resume=True)`` picks up the newest
+    checkpoint (elastic: the restore re-shards onto the current mesh),
+  * failure injection (``fail_at_step``) used by the fault-tolerance tests,
+  * straggler/preemption hook: a per-step deadline; overruns are logged and
+    counted (on real fleets this triggers the supervisor's replace-node
+    path; here it feeds the test that the loop survives slow steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data import SyntheticPipeline
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.optim import AdamW, warmup_cosine
+from repro.parallel import ctx as par_ctx
+from repro.parallel.sharding import Rules
+from repro.train.steps import TrainState, init_state, make_train_step
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: ArchConfig
+    seq_len: int = 128
+    global_batch: int = 8
+    workdir: Optional[str] = None
+    peak_lr: float = 3e-3
+    warmup: int = 20
+    total_steps: int = 200
+    ckpt_every: int = 0
+    keep: int = 3
+    seed: int = 0
+    mesh: Any = None
+    step_deadline_s: float = 0.0  # 0 => no deadline
+    fail_at_step: int = -1  # inject a crash (tests)
+    init_params: Any = None  # warm-start params (e.g. QAT retraining)
+
+    def __post_init__(self):
+        self.model = Model(self.cfg)
+        self.pipeline = SyntheticPipeline(self.cfg, self.seq_len,
+                                          self.global_batch, seed=self.seed)
+        self.optimizer = AdamW()
+        self.lr_fn = warmup_cosine(self.peak_lr, self.warmup, self.total_steps)
+        self.ckpt = (CheckpointManager(self.workdir, keep=self.keep)
+                     if self.workdir else None)
+        self.rules = (Rules.for_arch(self.mesh, self.cfg)
+                      if self.mesh is not None else None)
+        self.straggler_events = 0
+
+    # ------------------------------------------------------------------
+
+    def state_shardings(self) -> TrainState:
+        tree = self.model.build()
+        pspec = self.rules.param_shardings(
+            tree, fsdp=self.cfg.parallel.fsdp_params)
+        fsdp_opt = self.cfg.parallel.fsdp_opt
+        ospec = {"m": self.rules.param_shardings(tree, fsdp=fsdp_opt),
+                 "v": self.rules.param_shardings(tree, fsdp=fsdp_opt)}
+        return TrainState(step=self.rules.replicated(), params=pspec,
+                          opt=ospec)
+
+    def _jit_step(self):
+        gather_sh = None
+        if self.rules is not None and self.cfg.parallel.fsdp_params:
+            gather_sh = self.rules.param_shardings(
+                self.model.build(), fsdp=True)
+        step = make_train_step(self.model, self.optimizer, self.lr_fn,
+                               compute_shardings=gather_sh)
+        if self.mesh is None:
+            return jax.jit(step, donate_argnums=(0,))
+        state_sh = self.state_shardings()
+        batch_sh = self.rules.batch_specs(self.pipeline.batch_at(0))
+        # out_shardings pinned to the input state sharding so donation works
+        # step-over-step (XLA would otherwise pick its own output layout).
+        return jax.jit(step, in_shardings=(state_sh, batch_sh),
+                       out_shardings=(state_sh, None),
+                       donate_argnums=(0,))
+
+    def init_or_restore(self) -> tuple[TrainState, int]:
+        tree = self.model.build()
+        shardings = self.state_shardings() if self.rules is not None else None
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            template = init_state(pp.abstract_params(tree))
+            state, meta = self.ckpt.restore(template, shardings=shardings)
+            return state, int(meta["step"])
+        params = (self.init_params if self.init_params is not None
+                  else pp.init_params(tree, jax.random.key(self.seed)))
+        state = init_state(params)
+        if shardings is not None:
+            state = jax.tree.map(jax.device_put, state, shardings)
+        return state, 0
+
+    # ------------------------------------------------------------------
+
+    def run(self, n_steps: Optional[int] = None) -> Dict[str, float]:
+        n_steps = n_steps or self.total_steps
+        state, start = self.init_or_restore()
+        step_fn = self._jit_step()
+        history = []
+        cm = par_ctx.use_rules(self.rules) if self.rules is not None else None
+        if cm is not None:
+            cm.__enter__()
+        try:
+            for step in range(start, n_steps):
+                if step == self.fail_at_step:
+                    raise SimulatedFailure(f"injected failure at step {step}")
+                t0 = time.monotonic()
+                batch = jax.tree.map(jnp.asarray,
+                                     self.pipeline.batch_at(step))
+                state, metrics = step_fn(state, batch)
+                if self.step_deadline_s:
+                    dt = time.monotonic() - t0
+                    if dt > self.step_deadline_s:
+                        self.straggler_events += 1
+                history.append(float(metrics["loss"]))
+                if (self.ckpt is not None and self.ckpt_every
+                        and (step + 1) % self.ckpt_every == 0):
+                    self.ckpt.save(step + 1, state,
+                                   meta={"data": self.pipeline.state(step + 1),
+                                         "loss": history[-1]},
+                                   blocking=False)
+        finally:
+            if self.ckpt is not None:
+                self.ckpt.wait()
+            if cm is not None:
+                cm.__exit__(None, None, None)
+        return {"first_loss": history[0] if history else float("nan"),
+                "last_loss": history[-1] if history else float("nan"),
+                "losses": history, "state": state,
+                "straggler_events": self.straggler_events}

@@ -1,0 +1,161 @@
+"""Train / eval step factories (pjit-able, donation-friendly).
+
+``make_train_step`` builds the full step: loss (+ SWIS QAT fake-quant in the
+forward graph) -> grads (with optional gradient-accumulation scan over
+microbatches) -> global-norm clip -> optional int8 gradient compression ->
+AdamW update. All state transforms are pytree-generic so the same step works
+for every architecture family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+from repro.optim import AdamW, clip_by_global_norm
+from repro.optim.compress import dequantize_grads, quantize_grads_int8
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jnp.ndarray
+    params: Any
+    opt: Any
+
+
+def init_state(params) -> TrainState:
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=AdamW().init(params))
+
+
+def _split_micro(batch, n):
+    def s(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(s, batch)
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW,
+    lr_fn: Callable,
+    *,
+    max_grad_norm: float = 1.0,
+    compute_shardings=None,
+):
+    """``compute_shardings``: optional TP-only (FSDP-free) sharding tree.
+    When given, the compute-dtype copy of the params is constrained to it —
+    this pins the ZeRO-3 data-axis all-gather AFTER the bf16 cast (and after
+    QAT quantization), so the gather moves compute-dtype bytes, once per
+    step, outside the rematted region."""
+    cfg = model.cfg
+
+    compute_dt = jnp.dtype(cfg.compute_dtype)
+
+    def _cast_for_compute(params):
+        # One bf16 cast per step: FSDP/TP weight all-gathers then move
+        # compute-dtype bytes instead of fp32 (2x wire saving). Norm scales
+        # and other 1-D leaves stay fp32 for stability; the fp32 masters
+        # live in the optimizer state.
+        out = jax.tree.map(
+            lambda p: p.astype(compute_dt)
+            if (hasattr(p, "ndim") and p.ndim >= 2
+                and p.dtype == jnp.float32) else p,
+            params)
+        if compute_shardings is not None:
+            out = jax.tree.map(jax.lax.with_sharding_constraint, out,
+                               compute_shardings)
+        # Pin the converts: without the barrier XLA sinks the fp32->bf16
+        # cast into the layer scan and the ZeRO-3 gathers run on fp32.
+        return jax.lax.optimization_barrier(out)
+
+    if cfg.quant.mode == "qat":
+        # Hoist SWIS quantization out of the rematted layer scan and the
+        # microbatch loop: quantize every GEMM weight once per step (STE),
+        # then run the model with per-layer quantization off. Shift
+        # selection cost drops from (fwd + remat recompute) x n_micro to 1x.
+        from repro.core.qat import quantize_tree
+
+        inner = Model(cfg.replace(quant=dataclasses.replace(
+            cfg.quant, mode="off")))
+
+        def loss_fn(params, batch):
+            return inner.loss(
+                _cast_for_compute(quantize_tree(params, cfg.quant.cfg)),
+                batch)
+    else:
+        def loss_fn(params, batch):
+            return model.loss(_cast_for_compute(params), batch)
+
+    def compute_grads(params, batch):
+        n = cfg.parallel.grad_accum
+        if n <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return grads, metrics
+        micro = _split_micro(batch, n)
+
+        def body(acc, mb):
+            g_acc, m_acc = acc
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_acc, g)
+            m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": 0.0, "ce": 0.0, "aux": 0.0, "accuracy": 0.0}
+        m0 = jax.tree.map(jnp.float32, m0)
+        (grads, msum), _ = jax.lax.scan(body, (g0, m0), micro)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        metrics = jax.tree.map(lambda m: m / n, msum)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        grads, metrics = compute_grads(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        if cfg.parallel.grad_compress:
+            # int8 compress/decompress in the update path; on multi-pod
+            # deployments the cross-pod mean runs over the compressed
+            # payload (see optim.compress.compressed_allreduce).
+            q, s = quantize_grads_int8(grads)
+            grads = dequantize_grads(q, s)
+        lr = lr_fn(state.step)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt, state.params, lr=lr, step=state.step)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt=new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        _, metrics = model.loss(params, batch)
+        return metrics
+
+    return eval_step
+
+
+def make_serve_steps(model: Model):
+    """(prefill_fn, decode_fn) for the serving engine / dry-run."""
+
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    def decode(params, tokens, cache, index):
+        return model.decode_step(params, tokens, cache, index)
+
+    return prefill, decode

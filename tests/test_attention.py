@@ -1,0 +1,64 @@
+"""Attention numerics: chunked online-softmax vs full softmax; windows; GQA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import chunked_attention, full_attention
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(0, 1, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("chunk", [3, 8, 16, 64])
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_full(rng, chunk, window, causal):
+    b, sq, skv, h, hkv, dh = 2, 16, 16, 4, 2, 8
+    q = _rand(rng, b, sq, h, dh)
+    k = _rand(rng, b, skv, hkv, dh)
+    v = _rand(rng, b, skv, hkv, dh)
+    pos = jnp.arange(sq, dtype=jnp.int32)
+    kv_pos = jnp.arange(skv, dtype=jnp.int32)
+    want = full_attention(q, k, v, q_pos=pos, kv_pos=kv_pos, causal=causal,
+                          window=window)
+    got = chunked_attention(q, k, v, q_pos=pos, kv_pos=kv_pos, causal=causal,
+                            window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_padding_positions_masked(rng):
+    # kv_pos = -1 entries must not contribute
+    b, s, h, dh = 1, 8, 2, 4
+    q = _rand(rng, b, s, h, dh)
+    k = _rand(rng, b, s, h, dh)
+    v = _rand(rng, b, s, h, dh)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    kv_pos = pos.at[5:].set(-1)
+    out = full_attention(q, k, v, q_pos=pos, kv_pos=kv_pos, causal=True,
+                         window=None)
+    k2 = k.at[:, 5:].set(1e3)  # poison masked slots; output must not change
+    v2 = v.at[:, 5:].set(1e3)
+    out2 = full_attention(q, k2, v2, q_pos=pos, kv_pos=kv_pos, causal=True,
+                          window=None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-6)
+
+
+def test_gqa_head_grouping(rng):
+    # 4 query heads on 2 kv heads == manually repeated kv with MHA
+    b, s, dh = 1, 8, 4
+    q = _rand(rng, b, s, 4, dh)
+    k = _rand(rng, b, s, 2, dh)
+    v = _rand(rng, b, s, 2, dh)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    gqa = full_attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True,
+                         window=None)
+    k_rep = jnp.repeat(k, 2, axis=2)
+    v_rep = jnp.repeat(v, 2, axis=2)
+    # repeat_interleave matches the (hkv, group) reshape convention
+    mha = full_attention(q, k_rep, v_rep, q_pos=pos, kv_pos=pos, causal=True,
+                         window=None)
+    np.testing.assert_allclose(np.asarray(gqa), np.asarray(mha), rtol=1e-5,
+                               atol=1e-6)

@@ -1,0 +1,60 @@
+"""Cross-layer shift-budget allocator (beyond-paper ablation, core/budget.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import budget
+from repro.core.swis import QuantConfig
+from repro.models import params as pp
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = C.get_smoke("phi3-mini-3.8b").replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    qcfg = QuantConfig(method="swis", n_shifts=2, group_size=4)
+    prof = budget.sensitivity_profile(params, qcfg, levels=(1, 2, 3, 4))
+    sizes = budget.leaf_sizes(params)
+    return cfg, params, qcfg, prof, sizes
+
+
+def test_profile_monotone(setup):
+    _, _, _, prof, _ = setup
+    assert len(prof) >= 5  # per-layer units from stacked leaves
+    for costs in prof.values():
+        vals = [costs[n] for n in sorted(costs)]
+        assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+@pytest.mark.parametrize("target", [1.5, 2.0, 3.0])
+def test_allocation_hits_budget(setup, target):
+    _, _, _, prof, sizes = setup
+    alloc = budget.allocate(prof, sizes, target_avg=target,
+                            levels=(1, 2, 3, 4))
+    assert abs(alloc.effective_shifts - target) < 0.5
+    assert all(n in (1, 2, 3, 4) for n in alloc.shifts.values())
+
+
+def test_allocation_cost_beats_uniform_floor(setup):
+    # at avg 2.5 the allocated MSE++ must be <= the uniform-2 cost (more
+    # bits) and >= uniform-3 (fewer bits): sandwich sanity
+    _, _, _, prof, sizes = setup
+    alloc = budget.allocate(prof, sizes, target_avg=2.5, levels=(1, 2, 3, 4))
+    c2 = sum(c[2] for c in prof.values())
+    c3 = sum(c[3] for c in prof.values())
+    assert c3 - 1e-9 <= alloc.total_cost <= c2 + 1e-9
+
+
+def test_quantize_with_allocation_applies(setup):
+    cfg, params, qcfg, prof, sizes = setup
+    alloc = budget.allocate(prof, sizes, target_avg=2.0, levels=(1, 2, 3, 4))
+    qp = budget.quantize_with_allocation(params, qcfg, alloc)
+    # quantized leaves changed; non-eligible leaves untouched
+    w0 = params["blocks"]["sub0_attn"]["mlp"]["wi"]["w"]
+    w1 = qp["blocks"]["sub0_attn"]["mlp"]["wi"]["w"]
+    assert float(jnp.abs(w0 - w1).max()) > 0
+    np.testing.assert_array_equal(np.asarray(params["embed"]["tok"]),
+                                  np.asarray(qp["embed"]["tok"]))

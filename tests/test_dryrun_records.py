@@ -1,0 +1,85 @@
+"""Validate the recorded dry-run sweep (results/dryrun/): schema, coverage,
+and memory-fit invariants. Skipped when no sweep has been run locally."""
+import glob
+import json
+import os
+
+import pytest
+
+import repro.configs as C
+from repro.configs.base import SHAPES, shape_applicable
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "results", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(OUT, "*.json")),
+    reason="no dry-run sweep recorded (run repro.launch.dryrun --all)")
+
+
+def _records():
+    out = {}
+    for p in glob.glob(os.path.join(OUT, "*.json")):
+        r = json.load(open(p))
+        out[os.path.basename(p)[:-5]] = r
+    return out
+
+
+def test_full_cell_coverage():
+    recs = _records()
+    missing = []
+    for arch in C.ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                name = f"{arch}__{shape}__{mesh}__qat"
+                if name not in recs:
+                    missing.append(name)
+    assert not missing, missing
+
+
+def test_skips_match_assignment():
+    recs = _records()
+    for arch in C.ARCH_IDS:
+        cfg = C.get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, _ = shape_applicable(cfg, shape)
+            rec = recs[f"{arch}__{shape_name}__single__qat"]
+            assert ok == ("skipped" not in rec), (arch, shape_name)
+
+
+def test_record_schema_and_roofline_terms():
+    for name, r in _records().items():
+        if r.get("skipped"):
+            continue
+        for key in ("memory", "cost", "roofline", "collectives",
+                    "useful_flops_fraction", "n_params"):
+            assert key in r, (name, key)
+        t = r["roofline"]
+        assert t["bottleneck"] in ("compute", "memory", "collective")
+        assert t["roofline_bound_s"] >= max(
+            t["compute_s"], t["memory_s"], t["collective_s"]) - 1e-9
+        assert r["cost"]["flops"] > 0
+        assert r["chips"] == (512 if r.get("mesh_kind") == "multi" else 256)
+
+
+def test_decode_cells_fit_hbm():
+    # v5e = 16 GB; decode/serve argument residency must fit per device
+    for name, r in _records().items():
+        if r.get("skipped") or r["kind"] != "decode":
+            continue
+        args_gib = r["memory"]["argument_bytes"] / 2 ** 30
+        assert args_gib < 15.0, (name, args_gib)
+
+
+def test_packed_serving_smaller_than_dense_reference():
+    # where a quant-off reference exists, packed args must be smaller
+    ref_dir = OUT.replace("dryrun", "dryrun_noswis")
+    for p in glob.glob(os.path.join(ref_dir, "*decode*__off.json")):
+        ref = json.load(open(p))
+        name = os.path.basename(p)[:-5].replace("__off", "__qat")
+        packed_path = os.path.join(OUT, name)
+        if not os.path.exists(packed_path):
+            continue
+        packed = json.load(open(packed_path))
+        assert (packed["memory"]["argument_bytes"]
+                < ref["memory"]["argument_bytes"]), name

@@ -1,0 +1,96 @@
+"""Pallas SWIS matmul kernel: shape/dtype/group/shift sweep vs the pure-jnp
+oracle and vs dense fake-quant (exact same function)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing, swis
+from repro.kernels import ops, ref
+
+SWEEP = [
+    # (M, K, N, group, n_shifts, dtype)
+    (8, 128, 128, 4, 2, jnp.float32),
+    (16, 256, 256, 8, 3, jnp.float32),
+    (32, 512, 128, 4, 4, jnp.float32),
+    (8, 64, 256, 16, 5, jnp.float32),
+    (8, 128, 128, 4, 3, jnp.bfloat16),
+    (4, 96, 128, 4, 3, jnp.float32),  # K not multiple of default bk
+]
+
+
+def _make(rng, k, n, group, n_shifts):
+    w = rng.normal(0, 0.05, (k, n)).astype(np.float32)
+    qw = swis.quantize(jnp.asarray(w),
+                       swis.QuantConfig(n_shifts=n_shifts, group_size=group))
+    return qw, packing.pack(qw)
+
+
+@pytest.mark.parametrize("m,k,n,group,n_shifts,dtype", SWEEP)
+def test_pallas_matches_oracle(rng, m, k, n, group, n_shifts, dtype):
+    qw, pw = _make(rng, k, n, group, n_shifts)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), dtype)
+    want = np.asarray(ref.swis_matmul_ref(
+        x, pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale,
+        group=group), np.float32)
+    got = np.asarray(ops.swis_matmul(x, pw, use_pallas=True, interpret=True))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
+
+
+@pytest.mark.parametrize("m,k,n,group,n_shifts,dtype", SWEEP[:4])
+def test_oracle_matches_fake_quant(rng, m, k, n, group, n_shifts, dtype):
+    # packed matmul == x @ fake_quant(w): the paper's Eq. 7 equivalence
+    w = rng.normal(0, 0.05, (k, n)).astype(np.float32)
+    qw = swis.quantize(jnp.asarray(w),
+                       swis.QuantConfig(n_shifts=n_shifts, group_size=group))
+    pw = packing.pack(qw)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), dtype)
+    got = np.asarray(ops.swis_matmul(x, pw))
+    want = np.asarray(x @ qw.qweights.astype(dtype), np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-5,
+                               atol=1e-5 * np.abs(want).max())
+
+
+@pytest.mark.parametrize("n_shifts", [2, 3, 4])
+def test_swis_c_offset_packed(rng, n_shifts):
+    # SWIS-C stores one offset byte per group (paper §2.2 compression edge)
+    w = rng.normal(0, 0.05, (256, 128)).astype(np.float32)
+    qw = swis.quantize(jnp.asarray(w),
+                       swis.QuantConfig(method="swis_c", n_shifts=n_shifts,
+                                        group_size=4))
+    pw = packing.pack(qw)
+    assert pw.shifts.shape[-1] == 1 and pw.method == "swis_c"
+    x = jnp.asarray(rng.normal(0, 1, (8, 256)).astype(np.float32))
+    want = np.asarray(x @ qw.qweights)
+    for use_pallas in (False, True):
+        got = np.asarray(ops.swis_matmul(x, pw, use_pallas=use_pallas,
+                                         interpret=True))
+        np.testing.assert_allclose(got, want, rtol=1e-5,
+                                   atol=1e-5 * np.abs(want).max())
+
+
+def test_higher_rank_input(rng):
+    qw, pw = _make(rng, 128, 64, 4, 3)
+    x = jnp.asarray(rng.normal(0, 1, (2, 5, 128)).astype(np.float32))
+    y = ops.swis_matmul(x, pw)
+    assert y.shape == (2, 5, 64)
+
+
+def test_custom_vjp(rng):
+    qw, pw = _make(rng, 128, 128, 4, 3)
+    x = jnp.asarray(rng.normal(0, 1, (4, 128)).astype(np.float32))
+    g = jax.grad(lambda xx: ops.swis_matmul(xx, pw).sum())(x)
+    want = np.ones((4, 128)) @ np.asarray(qw.qweights).T
+    np.testing.assert_allclose(np.asarray(g), want, rtol=1e-4)
+
+
+def test_tile_shape_validation(rng):
+    qw, pw = _make(rng, 128, 128, 4, 3)
+    x = jnp.ones((8, 128), jnp.float32)
+    from repro.kernels.swis_matmul import swis_matmul_packed
+
+    with pytest.raises(ValueError):
+        swis_matmul_packed(x, pw.sign_plane, pw.mask_planes, pw.shifts,
+                           pw.scale, n_shifts=3, group=4, bm=8, bn=128,
+                           bk=48)  # bk not a multiple of 32

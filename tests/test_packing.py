@@ -1,0 +1,46 @@
+"""Bit-plane packing + compression math (paper §3.3, Fig. 5)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+
+
+def test_pack_unpack_bits(rng):
+    bits = jnp.asarray((rng.random((128, 5)) < 0.5).astype(np.uint8))
+    words = packing.pack_bits_u32(bits)
+    assert words.shape == (4, 5) and words.dtype == jnp.uint32
+    rec = packing.unpack_bits_u32(words)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(bits))
+
+
+def test_compression_formula_anchor_points():
+    # paper: close to 3.7x at large groups / aggressive shifts
+    assert abs(packing.compression_ratio(16, 1) - 3.66) < 0.01
+    # paper §3.3: group 4 spans ~1.1x-2.9x; SWIS breaks even at N=4
+    assert abs(packing.compression_ratio(4, 4) - 1.0) < 1e-9
+    assert 1.1 < packing.compression_ratio(4, 5, "swis_c") < 1.3
+    assert abs(packing.compression_ratio(4, 1, "swis") - 2.91) < 0.02
+    assert abs(packing.compression_ratio(4, 1, "swis_c") - 2.91) < 0.02
+    assert packing.compression_ratio(4, 3, "swis_c") > \
+        packing.compression_ratio(4, 3, "swis")
+
+
+def test_stored_bits_matches_formula(rng):
+    from repro.core.swis import QuantConfig, quantize
+
+    w = jnp.asarray(rng.normal(0, 0.05, (64, 8)).astype(np.float32))
+    for method in ("swis", "swis_c"):
+        cfg = QuantConfig(method=method, n_shifts=3, group_size=4)
+        pw = packing.pack(quantize(w, cfg))
+        ratio = (64 * 8 * 8) / pw.stored_bits
+        assert abs(ratio - packing.compression_ratio(4, 3, method)) < 1e-9
+
+
+def test_dpred_lossless_but_weaker(rng):
+    # DPRed on realistic (bell-shaped) 8-bit magnitudes compresses less than
+    # SWIS at iso group size (paper Fig. 5 discussion)
+    mags = np.abs(rng.normal(0, 30, (4096, 16))).clip(0, 255).round()
+    for g in (4, 8, 16):
+        d = packing.dpred_compression(mags, g)
+        assert 1.0 < d < packing.compression_ratio(g, 2, "swis_c") + 1.2

@@ -1,0 +1,72 @@
+"""Analytical perfmodel: paper-claim reproduction + monotonicity."""
+import pytest
+
+from repro.perfmodel import NETWORKS, PE_LIBRARY, SystolicArray, simulate_network
+from repro.perfmodel.evaluate import evaluate_table4, fig1_dram_ratio, headline_ratios
+
+
+def _net(cfg_name, n_shifts, method, net="resnet18"):
+    arr = SystolicArray(PE_LIBRARY[cfg_name])
+    return simulate_network(arr, NETWORKS[net], n_shifts=n_shifts,
+                            method=method)
+
+
+def test_fewer_shifts_faster():
+    prev = None
+    for n in (6, 4, 3, 2):
+        r = _net("swis_ss", n, "swis")
+        if prev is not None:
+            assert r["frames_per_s"] > prev["frames_per_s"]
+            assert r["frames_per_j"] > prev["frames_per_j"]
+        prev = r
+
+
+def test_double_shift_faster_than_single():
+    ss = _net("swis_ss", 4, "swis")
+    ds = _net("swis_ds", 4, "swis")
+    assert ds["frames_per_s"] > ss["frames_per_s"] * 1.5
+
+
+def test_swis_c_better_compression_dram():
+    s = _net("swis_ss", 3, "swis")
+    c = _net("swis_c_ss", 3, "swis_c")
+    assert c["wgt_dram_bytes"] < s["wgt_dram_bytes"]
+
+
+def test_headline_claims_reproduced():
+    h = headline_ratios()
+    # paper: up to 6x speedup, up to 1.9x energy vs act-trunc bit-serial
+    assert 4.5 <= h["max_speedup_vs_act_trunc"] <= 6.5
+    assert 1.5 <= h["max_energy_ratio_vs_act_trunc"] <= 2.1
+    # paper §3.3: up to 2.3x lower DRAM bandwidth vs 8-bit fixed
+    assert 1.8 <= h["dram_reduction_vs_fixed8"] <= 2.6
+
+
+def test_table4_fs_anchors():
+    # F/s calibration against paper Table 4 (ResNet-18)
+    paper_fs = {("swis_ss", "hi"): 28.6, ("swis_ds", "hi"): 42.9,
+                ("act_trunc", "hi"): 12.2, ("fixed8", "hi"): 23.2,
+                ("swis_ds", "lo"): 85.7}
+    rows = {(r["config"], r["point"]): r for r in evaluate_table4()
+            if r["network"] == "resnet18"}
+    for key, want in paper_fs.items():
+        got = rows[key]["frames_per_s"]
+        assert abs(got - want) / want < 0.12, (key, got, want)
+
+
+def test_fig1_weight_dominated_layers():
+    ratios = [r for _, r in fig1_dram_ratio()]
+    # paper: some layers have ~2 orders of magnitude more weight accesses
+    assert max(ratios) > 50
+    assert min(ratios) < 1  # early layers are activation-dominated
+
+
+def test_mobilenet_depthwise_underutilization():
+    # depthwise layers cost proportionally more on bit-serial (group waste)
+    sw = _net("swis_ss", 3, "swis", "mobilenet_v2")
+    fx = _net("fixed8", 8, "fixed8", "mobilenet_v2")
+    sw_r = _net("swis_ss", 3, "swis", "resnet18")
+    fx_r = _net("fixed8", 8, "fixed8", "resnet18")
+    mob_speedup = sw["frames_per_s"] / fx["frames_per_s"]
+    res_speedup = sw_r["frames_per_s"] / fx_r["frames_per_s"]
+    assert mob_speedup < res_speedup

@@ -1,0 +1,39 @@
+"""Paper Eqs. 8-10 / Fig. 2: lossless-quantization probabilities."""
+import math
+
+import numpy as np
+
+from repro.core import probability as P
+from repro.core import selection
+
+
+def test_orderings_and_limits():
+    t = P.lossless_table()
+    for a, b, c in zip(t["swis"], t["swis_c"], t["layerwise"]):
+        assert a >= b - 1e-12 >= c - 2e-12
+    assert abs(t["swis"][8] - 1) < 1e-12
+    assert abs(t["swis_c"][8] - 1) < 1e-12
+    assert abs(t["layerwise"][8] - 1) < 1e-12
+    assert abs(t["swis"][0] - 2 ** -8) < 1e-12
+
+
+def test_fig2_reference_values():
+    # spot values computable by hand from Eq. 8
+    assert abs(P.p_lossless_swis(4) - sum(
+        math.comb(8, n) for n in range(5)) / 256) < 1e-12
+    # SWIS-C N=1: representable = {0} + 8 single bits = 9 values
+    assert abs(P.p_lossless_swis_c(1) - 9 / 256) < 1e-12
+    # layer-wise N=2: 4 representable values on fixed support
+    assert abs(P.p_lossless_layerwise(2) - 4 / 256) < 1e-12
+
+
+def test_monte_carlo_agreement(rng):
+    vals = rng.integers(0, 256, 100000)
+    for variant, closed in (("swis", P.p_lossless_swis),
+                            ("swis_c", P.p_lossless_swis_c)):
+        for n in (2, 3, 4):
+            cand = selection.combo_candidates(n, 8, variant)
+            ok = np.zeros(len(vals), bool)
+            for c in range(cand.shape[0]):
+                ok |= np.isin(vals, cand[c].astype(np.int64))
+            assert abs(ok.mean() - closed(n)) < 0.01, (variant, n)

@@ -1,0 +1,98 @@
+"""Hypothesis property tests on the quantization system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing, selection
+from repro.core.swis import QuantConfig, fake_quant
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 255), st.integers(1, 7))
+def test_single_value_error_bound(value, n_shifts):
+    """SWIS nearest-candidate error is bounded by half the smallest
+    representable gap above the value's magnitude scale."""
+    mags = jnp.asarray([[float(value)]] * 4).reshape(1, 4)
+    signs = jnp.ones((1, 4))
+    out = selection.select_shifts(mags, signs, n_shifts=n_shifts)
+    err = abs(float(out["qmags"][0, 0]) - value)
+    # keeping the top n_shifts bits alone would give error < 2**(8-n)
+    assert err < 2 ** (8 - n_shifts)
+
+
+@given(st.integers(1, 8))
+def test_representable_values_are_fixed_points(n_shifts):
+    cand = selection.combo_candidates(n_shifts, 8, "swis")
+    vals = np.unique(cand)[:16]
+    mags = jnp.asarray(np.repeat(vals, 4).reshape(-1, 4), jnp.float32)
+    signs = jnp.ones_like(mags)
+    out = selection.select_shifts(mags, signs, n_shifts=n_shifts)
+    np.testing.assert_array_equal(np.asarray(out["qmags"]),
+                                  np.asarray(mags))
+
+
+@given(st.integers(0, 10000), st.sampled_from([1, 2, 4, 8]),
+       st.sampled_from([2, 3, 4]))
+def test_sign_preservation_and_group_optimality(seed, group, n_shifts):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.1, (32, 4)).astype(np.float32)
+    cfg = QuantConfig(n_shifts=n_shifts, group_size=group)
+    q = np.asarray(fake_quant(jnp.asarray(w), cfg))
+    # no sign flips (zero allowed)
+    assert np.all((np.sign(q) == np.sign(w)) | (q == 0))
+    scale = np.abs(w).max() / 255.0
+    if group == 1:
+        # solo groups: per-weight error bounded by the truncation fallback
+        assert np.abs(q - w).max() <= scale * (2 ** (8 - n_shifts) + 1)
+    # group-shared supports guarantee GROUP MSE++ optimality, not per-weight
+    # bounds: SWIS is an argmin over a superset of the MSB-window combo
+    # (same nearest-candidate assignment, same MSE++ metric, alpha=1).
+    q_tr = np.asarray(fake_quant(jnp.asarray(w),
+                                 QuantConfig(method="trunc",
+                                             n_shifts=n_shifts,
+                                             group_size=group,
+                                             round_trunc=True)))
+
+    def msepp(qq):
+        e = (w - qq).reshape(-1, group, 4)
+        return (e.sum(1) ** 2 + (e ** 2).sum(1)).sum()
+
+    assert float(msepp(q)) <= float(msepp(q_tr)) + 1e-10
+
+
+@given(st.integers(0, 1000), st.sampled_from([2, 3, 4, 5]))
+def test_pack_roundtrip_random(seed, n_shifts):
+    from repro.core.swis import quantize
+
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 0.05, (32, 4)).astype(np.float32))
+    qw = quantize(w, QuantConfig(n_shifts=n_shifts, group_size=4))
+    pw = packing.pack(qw)
+    np.testing.assert_allclose(np.asarray(packing.unpack_dense(pw)),
+                               np.asarray(qw.qweights), rtol=1e-6, atol=1e-9)
+
+
+@given(st.sampled_from([2, 4, 8, 16]), st.sampled_from([1, 2, 3, 4, 5, 6]))
+def test_compression_ratio_bounds(group, n_shifts):
+    r_swis = packing.compression_ratio(group, n_shifts, "swis")
+    r_c = packing.compression_ratio(group, n_shifts, "swis_c")
+    assert r_c >= r_swis > 0
+    # never better than the information floor of 1 sign + N mask bits
+    assert r_swis <= 8.0 / (1 + n_shifts) + 1e-9
+
+
+@given(st.integers(0, 500))
+def test_data_pipeline_determinism(step):
+    import repro.configs as C
+    from repro.data import SyntheticPipeline
+
+    cfg = C.get_smoke("smollm-135m")
+    p1 = SyntheticPipeline(cfg, 16, 4, seed=7)
+    p2 = SyntheticPipeline(cfg, 16, 4, seed=7)
+    b1, b2 = p1.batch_at(step), p2.batch_at(step)
+    for k in b1:
+        np.testing.assert_array_equal(b1[k], b2[k])
+    # labels are the next-token shift of tokens
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])

@@ -1,0 +1,95 @@
+"""Shift-selection enumeration (§4.1): exactness vs brute force + invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import selection
+
+
+@pytest.mark.parametrize("variant", ["swis", "swis_c", "trunc"])
+@pytest.mark.parametrize("n_shifts", [2, 3, 4])
+def test_matches_bruteforce(rng, variant, n_shifts):
+    mags = rng.integers(0, 256, (48, 4)).astype(np.float32)
+    signs = np.where(rng.random((48, 4)) < 0.5, -1.0, 1.0).astype(np.float32)
+    fast = selection.select_shifts(jnp.asarray(mags), jnp.asarray(signs),
+                                   n_shifts=n_shifts, variant=variant)
+    slow = selection.select_shifts_bruteforce(mags, signs, n_shifts=n_shifts,
+                                              variant=variant)
+    np.testing.assert_allclose(np.asarray(fast["cost"]), slow["cost"],
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("n_shifts", [2, 3, 4, 5])
+def test_masks_reconstruct_qmags(rng, n_shifts):
+    mags = rng.integers(0, 256, (64, 4)).astype(np.float32)
+    signs = np.ones((64, 4), np.float32)
+    out = selection.select_shifts(jnp.asarray(mags), jnp.asarray(signs),
+                                  n_shifts=n_shifts)
+    rec = ((np.asarray(out["masks"])[:, :, None]
+            >> np.arange(n_shifts)[None, None, :]) & 1)
+    rec = (rec * 2.0 ** np.asarray(out["shifts"])[:, None, :]).sum(-1)
+    np.testing.assert_array_equal(rec, np.asarray(out["qmags"]))
+
+
+def test_cost_monotone_in_shifts(rng):
+    mags = rng.integers(0, 256, (128, 4)).astype(np.float32)
+    signs = np.ones((128, 4), np.float32)
+    prev = None
+    for n in (1, 2, 3, 4, 5, 6):
+        cost = float(np.sum(np.asarray(selection.select_shifts(
+            jnp.asarray(mags), jnp.asarray(signs), n_shifts=n)["cost"])))
+        if prev is not None:
+            assert cost <= prev + 1e-6
+        prev = cost
+
+
+def test_variant_ordering(rng):
+    mags = rng.integers(0, 256, (256, 4)).astype(np.float32)
+    signs = np.ones((256, 4), np.float32)
+    for n in (2, 3, 4):
+        costs = {}
+        for v in ("swis", "swis_c", "trunc"):
+            costs[v] = float(np.sum(np.asarray(selection.select_shifts(
+                jnp.asarray(mags), jnp.asarray(signs), n_shifts=n,
+                variant=v)["cost"])))
+        assert costs["swis"] <= costs["swis_c"] + 1e-6
+        assert costs["swis_c"] <= costs["trunc"] + 1e-6
+
+
+def test_eight_shifts_lossless(rng):
+    mags = rng.integers(0, 256, (32, 4)).astype(np.float32)
+    signs = np.ones((32, 4), np.float32)
+    out = selection.select_shifts(jnp.asarray(mags), jnp.asarray(signs),
+                                  n_shifts=8)
+    np.testing.assert_array_equal(np.asarray(out["qmags"]), mags)
+    assert float(np.max(np.asarray(out["cost"]))) == 0.0
+
+
+def test_quantize_grouped_layout(rng):
+    mags = rng.integers(0, 256, (16, 3)).astype(np.float32)
+    signs = np.ones((16, 3), np.float32)
+    out = selection.quantize_grouped(jnp.asarray(mags), jnp.asarray(signs),
+                                     n_shifts=3, group_size=4)
+    assert out["qmags"].shape == (16, 3)
+    assert out["shifts"].shape == (4, 3, 3)
+    # group (0, col 0) must share a support vector: check all members'
+    # reconstructions only use those bit positions
+    sh = np.asarray(out["shifts"])[0, 0]
+    q = np.asarray(out["qmags"])[:4, 0].astype(np.int64)
+    allowed = np.zeros(8, bool)
+    allowed[sh] = True
+    for v in q:
+        bits = np.nonzero((v >> np.arange(8)) & 1)[0]
+        assert all(allowed[b] for b in bits)
+
+
+def test_alpha_reduces_signed_drift(rng):
+    mags = rng.integers(0, 256, (512, 8)).astype(np.float32)
+    signs = np.where(rng.random((512, 8)) < 0.5, -1.0, 1.0).astype(np.float32)
+    drift = {}
+    for alpha in (0.0, 4.0):
+        out = selection.select_shifts(jnp.asarray(mags), jnp.asarray(signs),
+                                      n_shifts=2, alpha=alpha)
+        err = (mags - np.asarray(out["qmags"])) * signs
+        drift[alpha] = float(np.abs(err.sum(-1)).mean())
+    assert drift[4.0] <= drift[0.0] + 1e-6

@@ -1,0 +1,101 @@
+"""Sharding rules + roofline parsing (no multi-device mesh needed)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+import repro.configs as C
+from repro.launch import roofline as RL
+from repro.models.model import Model
+from repro.models.params import P
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape for Rules' divisibility logic."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def _rules(**axes):
+    from repro.parallel.sharding import Rules
+
+    return Rules(mesh=FakeMesh(**axes), mapping=None or dict(
+        __import__("repro.parallel.sharding", fromlist=["DEFAULT_MAPPING"]
+                   ).DEFAULT_MAPPING))
+
+
+def test_divisibility_fallback():
+    r = _rules(data=16, model=16)
+    # kv_proj = 8 heads * 128: divisible => sharded
+    assert r.spec_for(("embed", "kv_proj"), (12288, 1024)) == PS(None, "model")
+    # 9 attention heads on a 16-way axis: dropped
+    assert r.spec_for(("batch", "heads", None), (256, 9, 64))[1] is None
+    # batch 256 over ('pod','data') when no pod axis: falls back to data
+    assert r.spec_for(("batch", None), (256, 4096)) == PS("data", None)
+
+
+def test_multipod_batch_sharding():
+    r = _rules(pod=2, data=16, model=16)
+    assert r.spec_for(("batch", None), (256, 10))[0] == ("pod", "data")
+    # batch=1 (long_500k): everything dropped
+    assert r.spec_for(("batch", None), (1, 10)) == PS(None, None)
+
+
+def test_no_axis_reuse_within_spec():
+    r = _rules(data=2, model=4)
+    # expert and mlp both map to model: only the first gets it
+    spec = r.spec_for(("expert", "embed", "mlp"), (8, 64, 64))
+    used = [s for s in spec if s is not None]
+    assert used.count("model") <= 1
+
+
+def test_fsdp_spec_adds_data_axis():
+    r = _rules(data=16, model=16)
+    tree = {"w": P((1024, 512), ("embed", "mlp"))}
+    plain = r.param_specs(tree)["w"]
+    fsdp = r.param_specs(tree, fsdp=True)["w"]
+    assert plain == PS(None, "model")
+    assert fsdp == PS("data", "model")
+
+
+def test_param_and_spec_trees_congruent():
+    r = _rules(data=16, model=16)
+    for arch in C.ARCH_IDS:
+        tree = Model(C.get_config(arch)).build()
+        specs = r.param_specs(tree)
+        assert jax.tree_util.tree_structure(
+            jax.tree.map(lambda x: 0, tree,
+                         is_leaf=lambda x: isinstance(x, P))) == \
+            jax.tree_util.tree_structure(
+                jax.tree.map(lambda x: 0, specs,
+                             is_leaf=lambda s: isinstance(s, PS)))
+
+
+HLO_SAMPLE = """
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, use_global_device_ids=true, to_apply=%add
+  %all-gather.2 = bf16[64,2048]{1,0} all-gather(%p0), channel_id=2, replica_groups=[32,16]<=[512], dimensions={0}
+  %rs = f32[16,16]{1,0} reduce-scatter(%x), channel_id=3, replica_groups={{0,1}}, to_apply=%add
+  %cp = f32[8,8]{1,0} collective-permute(%y), channel_id=4, source_target_pairs={{0,1}}
+"""
+
+
+def test_collective_parser():
+    out = RL.collective_bytes(HLO_SAMPLE)
+    ar = 1024 * 512 * 4
+    assert abs(out["all-reduce"] - 2 * ar * 3 / 4) < 1
+    ag = 64 * 2048 * 2
+    assert abs(out["all-gather"] - ag * 15 / 16) < 1
+    rs = 16 * 16 * 4
+    assert abs(out["reduce-scatter"] - rs * 1) < 1
+    assert out["collective-permute"] == 8 * 8 * 4
+    assert out["counts"]["all-reduce"] == 1
+
+
+def test_roofline_terms_bottleneck():
+    t = RL.roofline_terms(197e12, 819e9 * 2, 50e9 * 0.5)
+    assert t["bottleneck"] == "memory"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 2.0) < 1e-9
+    t2 = RL.roofline_terms(197e12 * 3, 819e9, 50e9)
+    assert t2["bottleneck"] == "compute"

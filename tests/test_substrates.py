@@ -1,0 +1,180 @@
+"""Data pipeline, optimizer, checkpointing, fault-tolerant loop, serving."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.checkpoint import CheckpointManager
+from repro.core.swis import QuantConfig
+from repro.data import SyntheticPipeline
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.optim import AdamW, clip_by_global_norm, global_norm, warmup_cosine
+from repro.optim.compress import dequantize_grads, quantize_grads_int8
+from repro.serve import DecodeEngine, pack_tree
+from repro.train.loop import SimulatedFailure, Trainer
+
+
+def test_pipeline_host_slicing():
+    cfg = C.get_smoke("smollm-135m")
+    full = SyntheticPipeline(cfg, 16, 8, seed=1)
+    b = full.batch_at(3)
+    parts = []
+    for h in range(4):
+        p = SyntheticPipeline(cfg, 16, 8, seed=1, n_hosts=4, host_id=h)
+        parts.append(p.host_slice(p.batch_at(3))["tokens"])
+    np.testing.assert_array_equal(np.concatenate(parts), b["tokens"])
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    target = jnp.asarray([1.0, 2.0])
+    for step in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state = opt.update(g, state, params, lr=0.05,
+                                   step=jnp.int32(step))
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_clip_and_schedule():
+    tree = {"a": jnp.full((10,), 3.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    lr = warmup_cosine(1e-3, 10, 100)
+    assert float(lr(0)) < float(lr(9))
+    assert float(lr(99)) < float(lr(10))
+
+
+def test_grad_compression_roundtrip(rng):
+    g = {"w": jnp.asarray(rng.normal(0, 1e-3, (64, 64)).astype(np.float32))}
+    q, s = quantize_grads_int8(g)
+    assert q["w"].dtype == jnp.int8
+    deq = dequantize_grads(q, s)
+    rel = float(jnp.abs(deq["w"] - g["w"]).max() / jnp.abs(g["w"]).max())
+    assert rel < 0.01  # 127-level quantization of a well-scaled leaf
+
+
+def test_checkpoint_roundtrip_retention_async():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+        for step in (1, 2, 3):
+            cm.save(step, tree, meta={"data": {"step": step}},
+                    blocking=(step != 3))
+        cm.wait()
+        assert cm.all_steps() == [2, 3]  # retention
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        restored, meta = cm.restore(template)
+        assert meta["step"] == 3
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        # atomicity: no tmp dirs left behind
+        assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+
+def test_train_loss_decreases_and_restart_bitexact():
+    cfg = C.get_smoke("smollm-135m")
+    with tempfile.TemporaryDirectory() as d:
+        a = Trainer(cfg, seq_len=32, global_batch=8,
+                    workdir=os.path.join(d, "a"), total_steps=10,
+                    ckpt_every=4, warmup=2, peak_lr=1e-2)
+        out_a = a.run(10)
+        assert out_a["last_loss"] < out_a["first_loss"] + 0.1
+        b1 = Trainer(cfg, seq_len=32, global_batch=8,
+                     workdir=os.path.join(d, "b"), total_steps=10,
+                     ckpt_every=4, warmup=2, peak_lr=1e-2, fail_at_step=6)
+        with pytest.raises(SimulatedFailure):
+            b1.run(10)
+        b2 = Trainer(cfg, seq_len=32, global_batch=8,
+                     workdir=os.path.join(d, "b"), total_steps=10,
+                     ckpt_every=4, warmup=2, peak_lr=1e-2)
+        out_b = b2.run(10)
+        diffs = jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()),
+                             out_a["state"].params, out_b["state"].params)
+        assert max(jax.tree.leaves(diffs)) == 0.0
+
+
+def test_straggler_deadline_counter():
+    cfg = C.get_smoke("smollm-135m")
+    tr = Trainer(cfg, seq_len=32, global_batch=8, total_steps=3, warmup=1,
+                 step_deadline_s=1e-9)  # everything is a straggler
+    out = tr.run(3)
+    assert out["straggler_events"] >= 2
+
+
+def test_packed_serving_matches_fake_quant(rng):
+    cfg = C.get_smoke("phi3-mini-3.8b").replace(compute_dtype="float32")
+    m = Model(cfg)
+    params = pp.init_params(m.build(), jax.random.key(0))
+    qcfg = QuantConfig(n_shifts=4, group_size=4)
+    packed, stats = pack_tree(params, qcfg)
+    assert stats["n_packed"] > 0
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)),
+                                   jnp.int32)}
+    lp, _, _ = m.apply(packed, batch)
+    # dense PTQ fake-quant path — mathematically the same function
+    from benchmarks.common import quant_policy
+
+    cfg_q = cfg.replace(quant=quant_policy("swis", 4))
+    lq, _, _ = Model(cfg_q).apply(params, batch)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lq), rtol=2e-3,
+                               atol=2e-3 * float(jnp.abs(lq).max()))
+
+
+def test_packed_moe_experts_match_fake_quant(rng):
+    # regression: stacked (L, E, K, C) 4-D expert weights must pack too
+    import dataclasses
+
+    from benchmarks.common import quant_policy
+
+    cfg = C.get_smoke("qwen2-moe-a2.7b").replace(compute_dtype="float32")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, d_ff_expert=64),
+                      d_ff=64)
+    m = Model(cfg)
+    params = pp.init_params(m.build(), jax.random.key(0))
+    packed, stats = pack_tree(params, QuantConfig(n_shifts=4, group_size=4))
+    assert stats["n_packed"] >= 10  # includes the 4-D expert stacks
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)),
+                                   jnp.int32)}
+    lp, _, _ = m.apply(packed, batch)
+    lq, _, _ = Model(cfg.replace(quant=quant_policy("swis", 4))).apply(
+        params, batch)
+    err = float(jnp.abs(lp - lq).max() / jnp.abs(lq).max())
+    assert err < 1e-4
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-2.7b",
+                                  "recurrentgemma-2b", "qwen2-moe-a2.7b"])
+def test_decode_engine_generates(rng, arch):
+    # engine-level generation across cache families (ring KV, SSD state,
+    # RG-LRU state + windowed ring, MoE dropless decode)
+    cfg = C.get_smoke(arch).replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    eng = DecodeEngine(cfg, params, max_len=32, batch=2)
+    prompt = rng.integers(0, cfg.vocab, (2, 5)).astype(np.int32)
+    out = eng.generate(prompt, 8)
+    assert out.shape == (2, 13)
+    np.testing.assert_array_equal(out[:, :5], prompt)
+    assert out.min() >= 0 and out.max() < cfg.padded_vocab
+
+
+def test_decode_engine_swis_c_packed(rng):
+    cfg = C.get_smoke("phi3-mini-3.8b").replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    eng = DecodeEngine(cfg, params, max_len=24, batch=2, packed=True,
+                       quant_cfg=QuantConfig(method="swis_c", n_shifts=4,
+                                             group_size=4))
+    prompt = rng.integers(0, cfg.vocab, (2, 4)).astype(np.int32)
+    out = eng.generate(prompt, 6)
+    assert out.shape == (2, 10)
+    # SWIS-C stores one offset byte per group
+    leaf = eng.params["blocks"]["sub0_attn"]["mlp"]["wi"]["w"]
+    assert leaf["shifts"].shape[-1] == 1

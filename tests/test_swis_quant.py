@@ -1,0 +1,95 @@
+"""High-level quantize / fake_quant APIs: Table-1 orderings + scheduling."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.swis import QuantConfig, act_truncate, fake_quant, quantize, rmse
+
+
+@pytest.fixture
+def weights(rng):
+    return jnp.asarray(rng.normal(0, 0.05, (128, 64)).astype(np.float32))
+
+
+def test_table1_rmse_ordering(weights):
+    for n in (2, 3, 4, 5):
+        r = {}
+        for m in ("swis", "swis_c", "trunc"):
+            q = fake_quant(weights, QuantConfig(method=m, n_shifts=n,
+                                                group_size=4))
+            r[m] = float(rmse(weights, q))
+        assert r["swis"] <= r["swis_c"] + 1e-9 <= r["trunc"] + 1e-6
+        # the paper's headline: floor-truncation is several x worse
+        assert r["trunc"] / r["swis"] > 1.5
+
+
+def test_rmse_grows_with_group_size(weights):
+    prev = None
+    for g in (1, 2, 4, 8, 16):
+        q = fake_quant(weights, QuantConfig(n_shifts=3, group_size=g))
+        cur = float(rmse(weights, q))
+        if prev is not None:
+            assert cur >= prev - 1e-7
+        prev = cur
+
+
+def test_fractional_shifts_interpolate(weights):
+    r = {n: float(rmse(weights, fake_quant(
+        weights, QuantConfig(n_shifts=n, group_size=4))))
+        for n in (2, 2.5, 3)}
+    assert r[3] <= r[2.5] <= r[2]
+
+
+def test_double_shift_scheduling(weights):
+    # DS with target 3 mixes 2- and 4-shift columns
+    q = quantize(weights, QuantConfig(n_shifts=3, group_size=4,
+                                      double_shift=True))
+    cols = np.asarray(q.col_shifts)
+    assert set(np.unique(cols)) <= {2, 4}
+    assert abs(cols.mean() - 3.0) < 0.51
+
+
+def test_requantization_stable(weights):
+    # Exact idempotence does not hold (the per-tensor scale re-derives from
+    # the quantized max), but double quantization must not degrade the
+    # approximation of the original weights.
+    cfg = QuantConfig(n_shifts=3, group_size=4)
+    q1 = fake_quant(weights, cfg)
+    q2 = fake_quant(q1, cfg)
+    assert float(rmse(weights, q2)) < 1.6 * float(rmse(weights, q1))
+
+
+def test_per_channel_improves(weights):
+    # scale one column up so per-tensor scale hurts it
+    w = np.asarray(weights).copy()
+    w[:, 0] *= 10
+    wj = jnp.asarray(w)
+    r_pt = float(rmse(wj, fake_quant(wj, QuantConfig(n_shifts=3, group_size=4,
+                                                     per_channel=False))))
+    r_pc = float(rmse(wj, fake_quant(wj, QuantConfig(n_shifts=3, group_size=4,
+                                                     per_channel=True))))
+    assert r_pc < r_pt
+
+
+def test_act_truncate():
+    a = jnp.asarray(np.linspace(-1, 1, 1000, dtype=np.float32))
+    scale = 1.0 / 255.0  # 8-bit round-to-nearest grid before bit dropping
+    for n in (2, 4, 6):
+        t = act_truncate(a, n)
+        # magnitudes shrink (floor toward zero) up to the rounding epsilon
+        assert float(jnp.max(jnp.abs(t) - jnp.abs(a))) <= scale / 2 + 1e-6
+    # more bits => smaller error
+    errs = [float(jnp.mean((act_truncate(a, n) - a) ** 2)) for n in (2, 4, 6, 8)]
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_quantize_metadata_roundtrip(weights):
+    for method in ("swis", "swis_c", "trunc"):
+        qw = quantize(weights, QuantConfig(method=method, n_shifts=3,
+                                           group_size=4))
+        pw = packing.pack(qw)
+        dense = packing.unpack_dense(pw)
+        np.testing.assert_allclose(np.asarray(dense),
+                                   np.asarray(qw.qweights), rtol=1e-6,
+                                   atol=1e-9)
