@@ -1,0 +1,110 @@
+"""Continuous-batching serve benchmark: tokens/sec at mixed prompt lengths.
+
+Workloads model the two traffic shapes a serving fleet actually sees:
+
+  uniform   every request arrives up front with the same prompt length
+            (the static engine's best case — measures pure decode rate)
+  mixed     prompt lengths spread 4-32 tokens, token budgets spread too,
+            arrivals staggered so slots are recycled mid-flight (the case
+            that requires continuous batching)
+
+Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--packed] \
+          [--arch smollm-135m --n-slots 4 --requests 12]
+
+Prints one JSON line per (workload, engine-config) with wall seconds and
+generated tokens/sec.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.core.swis import QuantConfig
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import ContinuousBatchingEngine
+
+MAX_LEN = 64
+
+
+def _requests_uniform(rng, cfg, n):
+    return [(rng.integers(0, cfg.vocab, (8,)).astype(np.int32), 16, 0)
+            for _ in range(n)]
+
+
+def _requests_mixed(rng, cfg, n):
+    out = []
+    for i in range(n):
+        s0 = int(rng.integers(4, 33))
+        n_tok = int(rng.integers(8, MAX_LEN - s0 + 1))
+        arrive = int(rng.integers(0, 12)) if i >= n // 3 else 0
+        out.append((rng.integers(0, cfg.vocab, (s0,)).astype(np.int32),
+                    n_tok, arrive))
+    return out
+
+
+WORKLOADS = {"uniform": _requests_uniform, "mixed": _requests_mixed}
+
+
+def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg):
+    rng = np.random.default_rng(0)
+    reqs = WORKLOADS[name](rng, cfg, requests)
+    total_tokens = sum(n for _, n, _ in reqs)
+
+    def one_pass():
+        eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
+                                       n_slots=n_slots, packed=packed,
+                                       quant_cfg=qcfg)
+        pending = sorted(range(len(reqs)), key=lambda i: reqs[i][2])
+        t0 = time.perf_counter()
+        step = 0
+        done = 0
+        while done < len(reqs):
+            while pending and reqs[pending[0]][2] <= step:
+                i = pending.pop(0)
+                eng.submit(reqs[i][0], reqs[i][1])
+            done += len(eng.step())
+            step += 1
+        return time.perf_counter() - t0
+
+    one_pass()  # warmup pass: all prefill/decode shapes compile here
+    dt = one_pass()
+    return {"workload": name, "engine": "continuous", "packed": packed,
+            "requests": len(reqs), "n_slots": n_slots,
+            "gen_tokens": total_tokens, "wall_s": round(dt, 3),
+            "tok_per_s": round(total_tokens / dt, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--packed", action="store_true")
+    ap.add_argument("--n-shifts", type=int, default=4)
+    ap.add_argument("--workloads", default="uniform,mixed")
+    args = ap.parse_args()
+
+    cfg = C.get_smoke(args.arch).replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    qcfg = QuantConfig(method="swis", n_shifts=args.n_shifts, group_size=4)
+
+    names = [n.strip() for n in args.workloads.split(",")]
+    unknown = [n for n in names if n not in WORKLOADS]
+    if unknown:
+        ap.error(f"unknown workload(s) {unknown}; "
+                 f"choose from {sorted(WORKLOADS)}")
+    for name in names:
+        rep = run_workload(name, cfg, params, n_slots=args.n_slots,
+                           requests=args.requests, packed=args.packed,
+                           qcfg=qcfg)
+        print(json.dumps(rep))
+
+
+if __name__ == "__main__":
+    main()

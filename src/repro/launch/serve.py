@@ -1,7 +1,11 @@
-"""Serving launcher: batched prefill+decode with optional SWIS-packed weights.
+"""Serving launcher: continuous-batching decode with optional SWIS-packed
+weights (see docs/serving.md for the engine architecture).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
-      --batch 4 --prompt-len 8 --tokens 24 --packed --n-shifts 4
+      --requests 8 --prompt-len 8 --tokens 24 --packed --n-shifts 4
+
+``--engine static`` runs the legacy lockstep DecodeEngine instead (equal
+prompt lengths only) — useful for A/B-ing the two hot paths.
 """
 from __future__ import annotations
 
@@ -16,14 +20,19 @@ import repro.configs as C
 from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
-from repro.serve import DecodeEngine
+from repro.serve import ContinuousBatchingEngine, DecodeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(C.ARCH_IDS))
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of requests to serve")
+    ap.add_argument("--n-slots", type=int, default=4,
+                    help="concurrent decode slots (continuous engine)")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--packed", action="store_true")
@@ -46,24 +55,41 @@ def main():
     else:
         params = pp.init_params(model.build(), jax.random.key(0))
 
-    eng = DecodeEngine(
-        cfg, params, max_len=args.prompt_len + args.tokens + 1,
-        batch=args.batch, packed=args.packed,
-        quant_cfg=QuantConfig(method="swis", n_shifts=args.n_shifts,
-                              group_size=args.group_size))
-    prompt = np.random.default_rng(0).integers(
-        0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
-    t0 = time.perf_counter()
-    out = eng.generate(prompt, args.tokens, temperature=args.temperature)
-    dt = time.perf_counter() - t0
-    report = {"arch": cfg.name, "batch": args.batch, "tokens": args.tokens,
-              "wall_s": round(dt, 2),
-              "tok_per_s": round(args.batch * args.tokens / dt, 1)}
+    qcfg = QuantConfig(method="swis", n_shifts=args.n_shifts,
+                       group_size=args.group_size)
+    max_len = args.prompt_len + args.tokens + 1
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        0, cfg.vocab, (args.requests, args.prompt_len)).astype(np.int32)
+
+    if args.engine == "static":
+        eng = DecodeEngine(cfg, params, max_len=max_len, batch=args.requests,
+                           packed=args.packed, quant_cfg=qcfg)
+        t0 = time.perf_counter()
+        out = eng.generate(prompts, args.tokens,
+                           temperature=args.temperature)
+        dt = time.perf_counter() - t0
+        sample = out[0]
+    else:
+        eng = ContinuousBatchingEngine(
+            cfg, params, max_len=max_len, n_slots=args.n_slots,
+            packed=args.packed, quant_cfg=qcfg)
+        rids = [eng.submit(p, args.tokens, temperature=args.temperature,
+                           seed=i) for i, p in enumerate(prompts)]
+        t0 = time.perf_counter()
+        results = eng.drain()
+        dt = time.perf_counter() - t0
+        sample = results[rids[0]]
+
+    report = {"arch": cfg.name, "engine": args.engine,
+              "requests": args.requests, "n_slots": args.n_slots,
+              "tokens": args.tokens, "wall_s": round(dt, 2),
+              "tok_per_s": round(args.requests * args.tokens / dt, 1)}
     if eng.pack_stats:
         report["packed_weights"] = eng.pack_stats["n_packed"]
         report["compression"] = round(eng.pack_stats["compression"], 2)
     print(json.dumps(report, indent=1))
-    print("sample:", out[0].tolist())
+    print("sample:", sample.tolist())
 
 
 if __name__ == "__main__":

@@ -30,6 +30,9 @@ def build_attention(cfg: ArchConfig, kind: str = "self") -> dict:
 
 
 def build_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    """K/V planes. The position plane is added by ``build_block_cache`` —
+    shared (cache_len,) for the static engine, per-slot (batch, cache_len)
+    for continuous batching."""
     hkv, dh = cfg.n_kv_heads, cfg.head_dim
     return {
         "k": P((batch, max_len, hkv, dh), ("batch", "kv_seq", "kv_heads", "head_dim"),
@@ -117,8 +120,8 @@ def full_attention(
     k: jnp.ndarray,  # (B, Skv, Hkv, Dh)
     v: jnp.ndarray,
     *,
-    q_pos: jnp.ndarray,
-    kv_pos: jnp.ndarray,
+    q_pos: jnp.ndarray,  # (Sq,) shared, or (B, Sq) per-slot
+    kv_pos: jnp.ndarray,  # (Skv,) shared, or (B, Skv) per-slot
     causal: bool,
     window: Optional[int],
 ) -> jnp.ndarray:
@@ -128,12 +131,16 @@ def full_attention(
     qh = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32) * (dh ** -0.5)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k.astype(jnp.float32),
                    preferred_element_type=jnp.float32)
-    valid = kv_pos[None, :] >= 0
+    # 2-D positions carry a per-batch (slot) row: each sequence in the batch
+    # masks against its own cache occupancy (continuous batching decode).
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None, :]  # (1 | B, Sq)
+    kp = kv_pos if kv_pos.ndim == 2 else kv_pos[None, :]  # (1 | B, Skv)
+    valid = kp[:, None, :] >= 0
     if causal:
-        valid &= kv_pos[None, :] <= q_pos[:, None]
+        valid &= kp[:, None, :] <= qp[:, :, None]
     if window is not None:
-        valid &= kv_pos[None, :] > q_pos[:, None] - window
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+        valid &= kp[:, None, :] > qp[:, :, None] - window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
@@ -163,8 +170,9 @@ def attention_apply(
     v = _split_heads(dense(p["wv"], kv_src, cfg), hkv, dh)
 
     if use_rope and ctx is None:
-        q = rope(q, positions[None, :], cfg.rope_theta)
-        k = rope(k, positions[None, :], cfg.rope_theta)
+        pos_b = positions if positions.ndim == 2 else positions[None, :]
+        q = rope(q, pos_b, cfg.rope_theta)
+        k = rope(k, pos_b, cfg.rope_theta)
 
     new_cache = None
     if ctx is not None:
@@ -175,30 +183,62 @@ def attention_apply(
         )
     elif cache is not None:
         # Ring-buffer cache {'k','v','pos'} of length cache_len (== window
-        # for local attention). Three statically-distinguished write modes:
-        # full-sequence prefill, tail prefill (S >= cache_len), and
-        # single-token decode (wrapping slot).
+        # for local attention). The position plane is either shared across
+        # the batch (1-D, static engine) or per-slot (2-D (B, cache_len),
+        # continuous batching), and ``cache_index`` is either a scalar
+        # (lockstep batch) or a (B,) vector (per-slot decode positions).
+        # Statically-distinguished write modes: full-sequence prefill, tail
+        # prefill (S >= cache_len), lockstep single-token decode, and
+        # per-slot single-token decode (each row wraps at its own slot).
         idx = cache_index
         cache_len = cache["k"].shape[1]
+        per_slot = cache["pos"].ndim == 2
         kd = k.astype(cache["k"].dtype)
         vd = v.astype(cache["v"].dtype)
         new_pos = positions.astype(jnp.int32)
-        if s >= cache_len:
+        if jnp.ndim(idx) == 1:
+            # per-slot decode: row r writes token at its own position idx[r]
+            assert s == 1 and per_slot, (s, per_slot)
+            slot = jnp.mod(idx, cache_len)  # (B,)
+            ck = jax.vmap(
+                lambda c, u, sl: jax.lax.dynamic_update_slice(c, u, (sl, 0, 0))
+            )(cache["k"], kd, slot)
+            cv = jax.vmap(
+                lambda c, u, sl: jax.lax.dynamic_update_slice(c, u, (sl, 0, 0))
+            )(cache["v"], vd, slot)
+            cp = jax.vmap(
+                lambda c, u, sl: jax.lax.dynamic_update_slice(c, u, (sl,))
+            )(cache["pos"], new_pos, slot)
+        elif s >= cache_len:
             # Keep the ring invariant slot == pos % cache_len so later
             # single-token writes overwrite the *oldest* entry.
             shift = jnp.mod(new_pos[-cache_len], cache_len)
             ck = jnp.roll(kd[:, -cache_len:], shift, axis=1)
             cv = jnp.roll(vd[:, -cache_len:], shift, axis=1)
             cp = jnp.roll(new_pos[-cache_len:], shift)
+            if per_slot:
+                cp = jnp.broadcast_to(cp[None, :], (b, cache_len))
         elif s == 1:
             slot = jnp.mod(idx, cache_len)
             ck = jax.lax.dynamic_update_slice(cache["k"], kd, (0, slot, 0, 0))
             cv = jax.lax.dynamic_update_slice(cache["v"], vd, (0, slot, 0, 0))
-            cp = jax.lax.dynamic_update_slice(cache["pos"], new_pos, (slot,))
+            if per_slot:
+                cp = jax.lax.dynamic_update_slice(
+                    cache["pos"], jnp.broadcast_to(new_pos[None, :], (b, 1)),
+                    (0, slot))
+            else:
+                cp = jax.lax.dynamic_update_slice(cache["pos"], new_pos,
+                                                  (slot,))
         else:  # chunked prefill within capacity (no wrap by construction)
             ck = jax.lax.dynamic_update_slice(cache["k"], kd, (0, idx, 0, 0))
             cv = jax.lax.dynamic_update_slice(cache["v"], vd, (0, idx, 0, 0))
-            cp = jax.lax.dynamic_update_slice(cache["pos"], new_pos, (idx,))
+            if per_slot:
+                cp = jax.lax.dynamic_update_slice(
+                    cache["pos"], jnp.broadcast_to(new_pos[None, :], (b, s)),
+                    (0, idx))
+            else:
+                cp = jax.lax.dynamic_update_slice(cache["pos"], new_pos,
+                                                  (idx,))
         new_cache = {"k": ck, "v": cv, "pos": cp}
         if s == 1:
             # decode: attend over the (ring) cache

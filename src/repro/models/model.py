@@ -57,17 +57,23 @@ class Model:
             }
         return tree
 
-    def build_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    def build_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                    per_slot: bool = False) -> dict:
+        """``per_slot=True`` builds the continuous-batching layout: the
+        position plane is (batch, cache_len) so every batch row (serving
+        slot) decodes at its own depth (see repro.serve.kv_cache)."""
         cfg = self.cfg
         unit_cache = {
-            f"sub{i}_{kind}": tfm.build_block_cache(cfg, kind, batch, max_len, dtype)
+            f"sub{i}_{kind}": tfm.build_block_cache(cfg, kind, batch, max_len,
+                                                    dtype, per_slot)
             for i, kind in enumerate(self.unit)
         }
         cache = {"blocks": pp.stack(unit_cache, self.n_units)}
         if self.tail:
             cache["tail"] = {
                 f"tail{i}_{kind}": tfm.build_block_cache(cfg, kind, batch,
-                                                         max_len, dtype)
+                                                         max_len, dtype,
+                                                         per_slot)
                 for i, kind in enumerate(self.tail)
             }
         return cache
@@ -178,6 +184,10 @@ class Model:
         s = x.shape[1]
         if cache_index is None:
             positions = jnp.arange(s, dtype=jnp.int32)
+        elif jnp.ndim(cache_index) == 1:
+            # per-slot decode: one write offset per batch row -> (B, S)
+            positions = (cache_index[:, None]
+                         + jnp.arange(s, dtype=jnp.int32)[None, :])
         else:
             positions = cache_index + jnp.arange(s, dtype=jnp.int32)
         ctx = batch.get("patches")
@@ -223,7 +233,9 @@ class Model:
         return logits[:, -1], cache
 
     def decode_step(self, params, token, cache, index):
-        """One decode step. token: (B, 1) int32; index: scalar tokens-so-far."""
+        """One decode step. token: (B, 1) int32; index: tokens-so-far — a
+        scalar (lockstep batch) or a (B,) vector of per-slot positions
+        (continuous batching over a per-slot cache)."""
         logits, cache, _ = self.apply(params, {"tokens": token}, cache=cache,
                                       cache_index=index)
         return logits[:, -1], cache

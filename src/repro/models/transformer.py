@@ -84,7 +84,7 @@ def build_block(cfg: ArchConfig, kind: str) -> dict:
 
 
 def build_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
-                      dtype) -> dict:
+                      dtype, per_slot: bool = False) -> dict:
     if kind in ("attn", "moe", "self_cross"):
         c = attn_mod.build_cache(cfg, batch, max_len, dtype)
     elif kind == "attn_local":
@@ -99,9 +99,15 @@ def build_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
     else:
         raise ValueError(kind)
     cache_len = c["k"].shape[1]
-    # position slots start invalid (-1) so unwritten cache entries are masked
-    c["pos"] = P((cache_len,), ("kv_seq",), init="fill", scale=-1,
-                 dtype=jnp.int32)
+    # position slots start invalid (-1) so unwritten cache entries are masked.
+    # per_slot: each batch row (serving slot) tracks its own occupancy so
+    # requests at different decode depths can share one batched cache.
+    if per_slot:
+        c["pos"] = P((batch, cache_len), ("batch", "kv_seq"), init="fill",
+                     scale=-1, dtype=jnp.int32)
+    else:
+        c["pos"] = P((cache_len,), ("kv_seq",), init="fill", scale=-1,
+                     dtype=jnp.int32)
     return c
 
 

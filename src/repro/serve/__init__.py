@@ -1,4 +1,7 @@
-from repro.serve.engine import DecodeEngine
+from repro.serve.engine import ContinuousBatchingEngine, DecodeEngine
+from repro.serve.kv_cache import SlotKVCache
 from repro.serve.quantized import pack_tree, packed_stats
+from repro.serve.scheduler import RequestScheduler
 
-__all__ = ["DecodeEngine", "pack_tree", "packed_stats"]
+__all__ = ["ContinuousBatchingEngine", "DecodeEngine", "RequestScheduler",
+           "SlotKVCache", "pack_tree", "packed_stats"]

@@ -1,10 +1,27 @@
-"""Batched decode engine: prefill + greedy/temperature decode over a ring KV
-cache, with optional SWIS-packed weights (the paper's compressed serving).
+"""Serve engines over SWIS-packed weights.
+
+Two engines share the same model, packing path, and seeded sampler:
+
+* :class:`ContinuousBatchingEngine` — the serving hot path. A
+  :class:`~repro.serve.scheduler.RequestScheduler` admits requests from a
+  queue into free slots of a :class:`~repro.serve.kv_cache.SlotKVCache`;
+  admitted requests prefill into their slot (grouped by prompt length)
+  while the other slots keep decoding, one batched per-slot decode step at
+  a time (``submit`` / ``step`` / ``drain``). With ``packed=True`` the
+  whole hot path runs on SWIS bit-plane weights (``pack_tree``) — HBM
+  weight traffic per decode step is the compressed bytes, the paper's
+  serving-side win.
+
+* :class:`DecodeEngine` — the legacy static-batch engine (one lockstep
+  batch, fresh cache per call). Kept as the parity oracle:
+  ``ContinuousBatchingEngine.generate`` reproduces its greedy tokens
+  exactly, and its seeded-temperature tokens exactly too because both
+  engines sample through :func:`sample_step` with identical per-row keys.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,11 +31,205 @@ from repro.configs.base import ArchConfig
 from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
+from repro.serve.kv_cache import SlotKVCache
 from repro.serve.quantized import pack_tree
+from repro.serve.scheduler import Finished, RequestScheduler
+
+
+@jax.jit
+def sample_step(logits, keys, steps, temps):
+    """Seeded per-row sampling shared by both engines.
+
+    Row r draws from ``categorical(fold_in(keys[r], steps[r]),
+    logits[r] / temps[r])`` (argmax when temps[r] <= 0). Because the key is
+    per-row, a request's tokens depend only on its own (key, step, logits)
+    — not on batch size, slot position, or who else is in flight.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(key, step, row, t):
+        k = jax.random.fold_in(key, step)
+        return jax.random.categorical(
+            k, row / jnp.maximum(t, 1e-6)).astype(jnp.int32)
+
+    sampled = jax.vmap(one)(keys, steps, logits, temps)
+    return jnp.where(temps <= 0.0, greedy, sampled)
+
+
+def _row_keys(rng, b: int):
+    """Per-row sampling keys for a lockstep batch: row r gets
+    fold_in(rng, r) — the same derivation ``generate()`` compat uses."""
+    return jax.vmap(lambda r: jax.random.fold_in(rng, r))(
+        jnp.arange(b, dtype=jnp.uint32))
+
+
+def _maybe_pack(cfg: ArchConfig, params, packed: bool,
+                quant_cfg: Optional[QuantConfig]):
+    """Common packing path: returns (cfg, params, pack_stats)."""
+    if not packed:
+        return cfg, params, None
+    qcfg = quant_cfg or cfg.quant.cfg
+    params, stats = pack_tree(params, qcfg)
+    # record the pack method so dense()/moe dispatch the right
+    # (consecutive vs sparse) unpack semantics
+    from repro.configs.base import QuantPolicy
+
+    return cfg.replace(quant=QuantPolicy(cfg=qcfg, mode="off")), params, stats
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+class ContinuousBatchingEngine:
+    """Step-driven serve engine: requests join mid-flight.
+
+    API: ``submit(prompt_1d, n_tokens, ...) -> rid``; ``step()`` runs one
+    scheduler round (admit + prefill new slots, one batched decode step)
+    and returns the requests that finished; ``drain()`` steps until idle.
+    ``generate`` is the drop-in static-batch compatibility wrapper.
+    """
+
+    def __init__(self, cfg: ArchConfig, params: Any, max_len: int = 256,
+                 n_slots: int = 4, packed: bool = False,
+                 quant_cfg: Optional[QuantConfig] = None,
+                 cache_dtype: Any = jnp.float32):
+        self.cfg, self.params, self.pack_stats = _maybe_pack(
+            cfg, params, packed, quant_cfg)
+        self.max_len = max_len
+        self.n_slots = n_slots
+        self.model = Model(self.cfg)
+        self.cache = SlotKVCache(self.model, n_slots, max_len, cache_dtype)
+        self.scheduler = RequestScheduler(n_slots)
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+        self._dummy_key = jax.random.key(0)
+
+    # -- request API ----------------------------------------------------
+
+    def submit(self, prompt, n_tokens: int, temperature: float = 0.0,
+               key=None, seed: Optional[int] = None, extra=None) -> int:
+        """``seed`` (or an explicit ``key``) makes a request's sampling
+        reproducible. When neither is given, each request gets a distinct
+        auto-key — independent clients must not draw identical streams."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if n_tokens < 0:
+            raise ValueError(f"n_tokens must be >= 0, got {n_tokens}")
+        if prompt.size + n_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + n_tokens ({n_tokens}) exceeds "
+                f"max_len ({self.max_len})")
+        if key is None:
+            if seed is not None:
+                key = jax.random.key(seed)
+            else:
+                key = jax.random.fold_in(self._dummy_key,
+                                         self.scheduler.next_rid())
+        return self.scheduler.submit(prompt, n_tokens, temperature, key,
+                                     extra)
+
+    def step(self) -> List[Finished]:
+        """Admit + prefill newly queued requests, then one decode step."""
+        admitted = self.scheduler.admit()
+        if admitted:
+            self._prefill_admitted(admitted)
+        if self.scheduler.needs_decode():
+            self._decode_once()
+        return self.scheduler.pop_finished()
+
+    def drain(self) -> Dict[int, np.ndarray]:
+        """Step until idle. Returns {rid: prompt + generated tokens}."""
+        out: Dict[int, np.ndarray] = {}
+        while self.scheduler.pending():
+            for f in self.step():
+                out[f.rid] = np.concatenate([f.prompt, f.tokens])
+        return out
+
+    # -- static-batch compatibility wrapper -----------------------------
+
+    def generate(self, prompt: np.ndarray, n_tokens: int,
+                 extra: Optional[Dict[str, Any]] = None,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """Drop-in for ``DecodeEngine.generate``: prompt (B, S0) int32 ->
+        (B, S0 + n_tokens). Row r samples with key fold_in(key(seed), r),
+        matching the legacy engine token-for-token."""
+        b, s0 = prompt.shape
+        assert s0 + n_tokens <= self.max_len
+        if self.scheduler.pending():
+            raise RuntimeError(
+                "generate() requires an idle engine (drain() would consume "
+                "in-flight requests' results); use submit/step/drain")
+        rng = jax.random.key(seed)
+        rids = []
+        for r in range(b):
+            ex = ({k: np.asarray(v)[r] for k, v in extra.items()}
+                  if extra else None)
+            rids.append(self.submit(
+                prompt[r], n_tokens, temperature=temperature,
+                key=jax.random.fold_in(rng, r), extra=ex))
+        out = self.drain()
+        return np.stack([out[rid] for rid in rids])
+
+    # -- internals ------------------------------------------------------
+
+    def _prefill_admitted(self, admitted) -> None:
+        # Group by prompt length (and extra-input signature, so requests
+        # with and without e.g. vlm patches never share a batch): one
+        # batched prefill per group keeps the jit shapes bounded and makes
+        # lockstep admission numerically identical to a static-batch
+        # prefill.
+        groups: Dict[Any, list] = {}
+        for slot, st in admitted:
+            ex = st.req.extra
+            sig = (tuple(sorted((k, np.shape(v)) for k, v in ex.items()))
+                   if ex else None)
+            groups.setdefault((len(st.req.prompt), sig), []).append(
+                (slot, st))
+        for _, group in groups.items():
+            toks = jnp.asarray(
+                np.stack([st.req.prompt for _, st in group]), jnp.int32)
+            batch = {"tokens": toks}
+            extras = [st.req.extra for _, st in group]
+            if extras[0]:
+                for k in extras[0]:
+                    batch[k] = jnp.asarray(
+                        np.stack([ex[k] for ex in extras]))
+            cache = self.cache.fresh(len(group))
+            logits, cache = self._prefill(self.params, batch, cache)
+            self.cache.write_slots(cache, [slot for slot, _ in group])
+            keys = jnp.stack([st.req.key for _, st in group])
+            temps = jnp.asarray(
+                [st.req.temperature for _, st in group], jnp.float32)
+            steps = jnp.zeros(len(group), jnp.int32)
+            first = np.asarray(sample_step(logits, keys, steps, temps))
+            for (slot, _), tok in zip(group, first):
+                self.scheduler.record_prefill(slot, tok)
+
+    def _decode_once(self) -> None:
+        toks, idxs, steps, temps, keys = self.scheduler.decode_batch(
+            self._dummy_key)
+        logits, tree = self._decode(
+            self.params, jnp.asarray(toks)[:, None], self.cache.tree,
+            jnp.asarray(idxs))
+        self.cache.tree = tree
+        nxt = sample_step(logits, jnp.stack(keys), jnp.asarray(steps),
+                          jnp.asarray(temps))
+        self.scheduler.record_decode(np.asarray(nxt))
+
+
+# ---------------------------------------------------------------------------
+# Legacy static-batch engine (parity oracle)
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class DecodeEngine:
+    """Static-batch decode: prefill + lockstep decode over a ring KV cache,
+    fresh cache per ``generate`` call. Superseded by
+    :class:`ContinuousBatchingEngine` on the serving path; retained as the
+    reference implementation the parity tests pin the new engine against."""
+
     cfg: ArchConfig
     params: Any
     max_len: int = 256
@@ -28,17 +239,9 @@ class DecodeEngine:
     cache_dtype: Any = jnp.float32
 
     def __post_init__(self):
+        self.cfg, self.params, self.pack_stats = _maybe_pack(
+            self.cfg, self.params, self.packed, self.quant_cfg)
         self.model = Model(self.cfg)
-        self.pack_stats = None
-        if self.packed:
-            qcfg = self.quant_cfg or self.cfg.quant.cfg
-            self.params, self.pack_stats = pack_tree(self.params, qcfg)
-            # record the pack method so dense()/moe dispatch the right
-            # (consecutive vs sparse) unpack semantics
-            from repro.configs.base import QuantPolicy
-
-            self.cfg = self.cfg.replace(
-                quant=QuantPolicy(cfg=qcfg, mode="off"))
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
 
@@ -59,21 +262,20 @@ class DecodeEngine:
             batch.update({k: jnp.asarray(v) for k, v in extra.items()})
         logits, cache = self._prefill(self.params, batch, cache)
         rng = jax.random.key(seed)
+        keys = _row_keys(rng, b)
+        temps = jnp.full((b,), temperature, jnp.float32)
         out = [jnp.asarray(prompt, jnp.int32)]
-        tok = self._sample(logits, rng, temperature, 0)
+        tok = self._sample(logits, keys, temps, 0)
         for i in range(n_tokens):
             out.append(tok)
             if i == n_tokens - 1:
                 break
             logits, cache = self._decode(self.params, tok, cache,
                                          jnp.int32(s0 + i))
-            tok = self._sample(logits, rng, temperature, i + 1)
+            tok = self._sample(logits, keys, temps, i + 1)
         return np.asarray(jnp.concatenate(out, axis=1))
 
     @staticmethod
-    def _sample(logits, rng, temperature, i):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        k = jax.random.fold_in(rng, i)
-        return jax.random.categorical(
-            k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
+    def _sample(logits, keys, temps, i):
+        steps = jnp.full((logits.shape[0],), i, jnp.int32)
+        return sample_step(logits, keys, steps, temps)[:, None]

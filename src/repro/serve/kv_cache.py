@@ -1,0 +1,64 @@
+"""Slot-based paged KV cache for continuous batching.
+
+One batched cache tree holds ``n_slots`` independent request slots. The
+batch axis of every leaf is the slot axis (axis 1 under the scanned
+``blocks`` subtree — axis 0 there is the layer-stack — and axis 0 under the
+unrolled ``tail``). Each slot carries its own position plane
+(``pos`` of shape (n_slots, cache_len), built with ``per_slot=True``), so a
+new request can prefill into a free slot while the other slots keep
+decoding at different depths — the attention mask only ever admits entries
+whose ``pos`` row is valid (>= 0), which is what isolates slots from each
+other and from stale entries of evicted requests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import params as pp
+
+# batch (slot) axis per top-level cache subtree: the scanned "blocks" leaves
+# carry a leading layer-stack axis, the unrolled "tail" leaves do not.
+_SLOT_AXIS = {"blocks": 1, "tail": 0}
+
+
+class SlotKVCache:
+    """Batched per-slot cache tree with scatter/gather on the slot axis."""
+
+    def __init__(self, model, n_slots: int, max_len: int,
+                 dtype: Any = jnp.float32):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self._fresh: dict = {}  # batch -> constant zero-init tree
+        # live tree must not alias the memoized constant: the engine's
+        # decode jit donates its buffers
+        self.tree = jax.tree.map(jnp.copy, self.fresh(n_slots))
+
+    def fresh(self, batch: int):
+        """A zero-initialized ``batch``-slot cache (pos planes all -1).
+        Memoized per batch size — the content is constant, jax arrays are
+        immutable, and prefill does not donate it, so admissions on the
+        serving hot path skip the rebuild + device fill."""
+        if batch not in self._fresh:
+            tree = self.model.build_cache(batch, self.max_len, self.dtype,
+                                          per_slot=True)
+            self._fresh[batch] = pp.init_params(tree, jax.random.key(0))
+        return self._fresh[batch]
+
+    def write_slots(self, slot_tree, slots) -> None:
+        """Scatter a ``len(slots)``-slot tree into rows ``slots`` of the
+        live cache (used after prefilling admitted requests)."""
+        slots = jnp.asarray(np.asarray(slots, np.int32))
+        out = {}
+        for key, sub in self.tree.items():
+            axis = _SLOT_AXIS[key]
+            out[key] = jax.tree.map(
+                lambda a, b, ax=axis: (a.at[slots].set(b) if ax == 0
+                                       else a.at[:, slots].set(b)),
+                sub, slot_tree[key])
+        self.tree = out

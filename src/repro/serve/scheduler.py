@@ -1,0 +1,155 @@
+"""Request scheduling for the continuous-batching serve engine.
+
+``RequestScheduler`` owns the admission queue and the per-slot request
+state. The engine drives it step-by-step:
+
+  submit()        enqueue a request (any time, including mid-flight)
+  admit()         pop queued requests into free slots -> they need prefill
+  record_prefill  store a request's first sampled token after prefill
+  decode_batch    flatten live slot state into the per-slot decode arrays
+  record_decode   append one sampled token to every slot that decoded
+  pop_finished    collect requests that hit their token budget (slot freed)
+
+Slots are freed eagerly on completion, so a queued request can be admitted
+on the very next step while the remaining slots keep decoding — the
+mid-flight interleaving that a static batch engine cannot do.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S0,) int32
+    n_tokens: int
+    temperature: float
+    key: Any  # jax PRNG key for seeded sampling
+    extra: Optional[Dict[str, np.ndarray]] = None  # e.g. vlm patches
+
+
+@dataclasses.dataclass
+class SlotState:
+    req: Request
+    n_gen: int = 0  # tokens sampled so far (incl. the prefill token)
+    last_tok: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Finished:
+    rid: int
+    prompt: np.ndarray
+    tokens: np.ndarray  # (n_tokens,) generated
+
+
+class RequestScheduler:
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.queue: collections.deque = collections.deque()
+        self.slots: List[Optional[SlotState]] = [None] * n_slots
+        self._next_rid = 0
+        self._finished: List[Finished] = []
+        self._decoding: List[int] = []
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+
+    def next_rid(self) -> int:
+        """The rid the next submit() will be assigned (for auto-keying)."""
+        return self._next_rid
+
+    def submit(self, prompt: np.ndarray, n_tokens: int, temperature: float,
+               key, extra=None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  n_tokens, temperature, key, extra))
+        return rid
+
+    def admit(self) -> List[Tuple[int, SlotState]]:
+        """Move queued requests into free slots (in submission order)."""
+        admitted = []
+        for slot in range(self.n_slots):
+            if not self.queue:
+                break
+            if self.slots[slot] is None:
+                st = SlotState(self.queue.popleft())
+                self.slots[slot] = st
+                admitted.append((slot, st))
+        return admitted
+
+    # ------------------------------------------------------------------
+    # Token bookkeeping
+    # ------------------------------------------------------------------
+
+    def record_prefill(self, slot: int, tok: int) -> None:
+        st = self.slots[slot]
+        if st.req.n_tokens == 0:  # degenerate: nothing to generate
+            self._finish(slot)
+            return
+        st.n_gen = 1
+        st.last_tok = int(tok)
+        st.tokens.append(int(tok))
+        if st.n_gen >= st.req.n_tokens:
+            self._finish(slot)
+
+    def needs_decode(self) -> bool:
+        return any(st is not None and st.n_gen < st.req.n_tokens
+                   for st in self.slots)
+
+    def decode_batch(self, dummy_key):
+        """Per-slot arrays for one decode step over ALL slots (fixed jit
+        shape). Free slots step on dummy values; their rows are overwritten
+        wholesale at the next admission, so the garbage never escapes."""
+        toks = np.zeros(self.n_slots, np.int32)
+        idxs = np.zeros(self.n_slots, np.int32)
+        steps = np.zeros(self.n_slots, np.int32)
+        temps = np.zeros(self.n_slots, np.float32)
+        keys = [dummy_key] * self.n_slots
+        self._decoding = []
+        for slot, st in enumerate(self.slots):
+            if st is None or st.n_gen >= st.req.n_tokens:
+                continue
+            self._decoding.append(slot)
+            toks[slot] = st.last_tok
+            # the token being fed sits at position S0 + n_gen - 1
+            idxs[slot] = len(st.req.prompt) + st.n_gen - 1
+            steps[slot] = st.n_gen  # sampling fold-in index
+            temps[slot] = st.req.temperature
+            keys[slot] = st.req.key
+        return toks, idxs, steps, temps, keys
+
+    def record_decode(self, toks: np.ndarray) -> None:
+        for slot in self._decoding:
+            st = self.slots[slot]
+            st.n_gen += 1
+            st.last_tok = int(toks[slot])
+            st.tokens.append(int(toks[slot]))
+            if st.n_gen >= st.req.n_tokens:
+                self._finish(slot)
+        self._decoding = []
+
+    # ------------------------------------------------------------------
+    # Completion
+    # ------------------------------------------------------------------
+
+    def _finish(self, slot: int) -> None:
+        st = self.slots[slot]
+        self._finished.append(Finished(
+            st.req.rid, st.req.prompt,
+            np.asarray(st.tokens, np.int32)))
+        self.slots[slot] = None  # evict: slot is immediately reusable
+
+    def pop_finished(self) -> List[Finished]:
+        out, self._finished = self._finished, []
+        return out
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(st is not None for st in self.slots)

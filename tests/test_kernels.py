@@ -94,3 +94,94 @@ def test_tile_shape_validation(rng):
         swis_matmul_packed(x, pw.sign_plane, pw.mask_planes, pw.shifts,
                            pw.scale, n_shifts=3, group=4, bm=8, bn=128,
                            bk=48)  # bk not a multiple of 32
+
+
+# ---------------------------------------------------------------------------
+# Parametrized kernel sweep: consecutive (SWIS-C) x n_shifts x tile shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("consecutive", [False, True])
+@pytest.mark.parametrize("n_shifts", [1, 2, 3])
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 64), (16, 128, 32)])
+def test_packed_kernel_param_sweep(rng, consecutive, n_shifts, bm, bn, bk):
+    m, k, n, group = 16, 128, 128, 4
+    method = "swis_c" if consecutive else "swis"
+    w = rng.normal(0, 0.05, (k, n)).astype(np.float32)
+    qw = swis.quantize(jnp.asarray(w),
+                       swis.QuantConfig(method=method, n_shifts=n_shifts,
+                                        group_size=group))
+    pw = packing.pack(qw)
+    assert (pw.method == "swis_c") == consecutive
+    x = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    want = np.asarray(ref.swis_matmul_ref(
+        x, pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale,
+        group=group, consecutive=consecutive))
+    from repro.kernels.swis_matmul import swis_matmul_packed
+
+    got = np.asarray(swis_matmul_packed(
+        x, pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale,
+        n_shifts=n_shifts, group=group, bm=bm, bn=bn, bk=bk,
+        interpret=True, consecutive=consecutive))
+    np.testing.assert_allclose(got, want, rtol=1e-5,
+                               atol=1e-5 * max(np.abs(want).max(), 1.0))
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    # bk=48: not a multiple of 32 (divides k=192 so the shape check passes)
+    (dict(bm=8, bn=128, bk=48), "multiple of 32"),
+    # bk=64 is a multiple of 32 but not of group=48
+    (dict(bm=8, bn=128, bk=64, group=48), "group"),
+    # k=192 is not divisible by bk=160
+    (dict(bm=8, bn=128, bk=160), "not divisible"),
+    (dict(bm=5, bn=128, bk=192), "not divisible"),  # m=8 % bm=5
+])
+def test_tile_error_paths(rng, kwargs, match):
+    from repro.kernels.swis_matmul import swis_matmul_packed
+
+    k, n, n_shifts = 192, 128, 3
+    group = kwargs.pop("group", 4)
+    x = jnp.ones((8, k), jnp.float32)
+    sign = jnp.zeros((k // 32, n), jnp.uint32)
+    mask = jnp.zeros((n_shifts, k // 32, n), jnp.uint32)
+    shifts = jnp.zeros((k // group, n, (n_shifts + 1) // 2), jnp.uint8)
+    scale = jnp.ones((1, n), jnp.float32)
+    with pytest.raises(ValueError, match=match):
+        swis_matmul_packed(x, sign, mask, shifts, scale, n_shifts=n_shifts,
+                           group=group, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# _pick_tiles: the launcher's tile-shape heuristic
+# ---------------------------------------------------------------------------
+
+
+def test_pick_tiles_divisibility_invariants():
+    from repro.kernels.ops import _pick_tiles
+
+    for m, k, n, group in [(128, 512, 256, 4), (16, 256, 128, 8),
+                           (8, 64, 256, 16), (4, 96, 128, 4)]:
+        bm, bn, bk = _pick_tiles(m, k, n, group)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+        assert bk % group == 0
+
+
+def test_pick_tiles_odd_prime_dims():
+    from repro.kernels.ops import _pick_tiles
+
+    # prime dims: bm degrades to the 1-row candidate, bn/bk fall back to
+    # the full dimension (still valid: whole-axis single tile)
+    bm, bn, bk = _pick_tiles(7, 97, 13, 1)
+    assert (bm, bn, bk) == (1, 13, 97)
+
+
+def test_pick_tiles_group_forces_bk_fallback():
+    from repro.kernels.ops import _pick_tiles
+
+    # group=3 divides k=96 but no power-of-two candidate, so bk must fall
+    # back to the whole K dimension
+    bm, bn, bk = _pick_tiles(8, 96, 128, 3)
+    assert bk == 96 and bk % 3 == 0
+    # and a group that divides the halved candidates keeps the tile small
+    _, _, bk2 = _pick_tiles(8, 1024, 128, 4)
+    assert bk2 == 512
