@@ -1,18 +1,23 @@
 """Continuous-batching serve benchmark: tokens/sec at mixed prompt lengths.
 
-Workloads model the two traffic shapes a serving fleet actually sees:
+Workloads model the traffic shapes a serving fleet actually sees:
 
-  uniform   every request arrives up front with the same prompt length
-            (the static engine's best case — measures pure decode rate)
-  mixed     prompt lengths spread 4-32 tokens, token budgets spread too,
-            arrivals staggered so slots are recycled mid-flight (the case
-            that requires continuous batching)
+  uniform        every request arrives up front with the same prompt length
+                 (the static engine's best case — measures pure decode rate)
+  mixed          prompt lengths spread 4-32 tokens, token budgets spread too,
+                 arrivals staggered so slots are recycled mid-flight (the
+                 case that requires continuous batching)
+  shared_prefix  N requests over K distinct system prompts (each request =
+                 one of K long shared prefixes + a short unique tail) —
+                 the shape the radix prefix cache exists for; the report
+                 adds hit rate and prefill tokens avoided
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--packed] \
-          [--arch smollm-135m --n-slots 4 --requests 12]
+          [--arch smollm-135m --n-slots 4 --requests 12] \
+          [--no-prefix-cache] [--block-size 8]
 
 Prints one JSON line per (workload, engine-config) with wall seconds and
-generated tokens/sec.
+generated tokens/sec (plus prefix_stats fields when the cache is on).
 """
 from __future__ import annotations
 
@@ -48,10 +53,25 @@ def _requests_mixed(rng, cfg, n):
     return out
 
 
-WORKLOADS = {"uniform": _requests_uniform, "mixed": _requests_mixed}
+def _requests_shared_prefix(rng, cfg, n, n_sys=3, sys_len=24):
+    sys_prompts = [rng.integers(0, cfg.vocab, (sys_len,)).astype(np.int32)
+                   for _ in range(n_sys)]
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab,
+                            (int(rng.integers(3, 9)),)).astype(np.int32)
+        prompt = np.concatenate([sys_prompts[i % n_sys], tail])
+        arrive = int(rng.integers(0, 10)) if i >= n_sys else 0
+        out.append((prompt, int(rng.integers(8, 17)), arrive))
+    return out
 
 
-def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg):
+WORKLOADS = {"uniform": _requests_uniform, "mixed": _requests_mixed,
+             "shared_prefix": _requests_shared_prefix}
+
+
+def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
+                 prefix_cache=True, block_size=8):
     rng = np.random.default_rng(0)
     reqs = WORKLOADS[name](rng, cfg, requests)
     total_tokens = sum(n for _, n, _ in reqs)
@@ -59,7 +79,9 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg):
     def one_pass():
         eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
                                        n_slots=n_slots, packed=packed,
-                                       quant_cfg=qcfg)
+                                       quant_cfg=qcfg,
+                                       prefix_cache=prefix_cache,
+                                       block_size=block_size)
         pending = sorted(range(len(reqs)), key=lambda i: reqs[i][2])
         t0 = time.perf_counter()
         step = 0
@@ -70,14 +92,24 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg):
                 eng.submit(reqs[i][0], reqs[i][1])
             done += len(eng.step())
             step += 1
-        return time.perf_counter() - t0
+        return time.perf_counter() - t0, eng
 
     one_pass()  # warmup pass: all prefill/decode shapes compile here
-    dt = one_pass()
-    return {"workload": name, "engine": "continuous", "packed": packed,
-            "requests": len(reqs), "n_slots": n_slots,
-            "gen_tokens": total_tokens, "wall_s": round(dt, 3),
-            "tok_per_s": round(total_tokens / dt, 1)}
+    dt, eng = one_pass()
+    rep = {"workload": name, "engine": "continuous", "packed": packed,
+           "prefix_cache": eng.prefix_cache is not None,
+           "requests": len(reqs), "n_slots": n_slots,
+           "gen_tokens": total_tokens, "wall_s": round(dt, 3),
+           "tok_per_s": round(total_tokens / dt, 1)}
+    stats = eng.prefix_stats()
+    prompt_tokens = sum(len(p) for p, _, _ in reqs)
+    rep["prompt_tokens"] = prompt_tokens
+    rep["prefill_tokens"] = stats["prefill_tokens"]
+    if stats["enabled"]:
+        rep["hit_rate"] = round(stats["hit_rate"], 3)
+        rep["prefill_tokens_saved"] = stats["saved_tokens"]
+        rep["evictions"] = stats["evictions"]
+    return rep
 
 
 def main():
@@ -87,7 +119,10 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--n-shifts", type=int, default=4)
-    ap.add_argument("--workloads", default="uniform,mixed")
+    ap.add_argument("--workloads", default="uniform,mixed,shared_prefix")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="contiguous per-slot KV (no block sharing)")
+    ap.add_argument("--block-size", type=int, default=8)
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch).replace(compute_dtype="float32")
@@ -102,7 +137,8 @@ def main():
     for name in names:
         rep = run_workload(name, cfg, params, n_slots=args.n_slots,
                            requests=args.requests, packed=args.packed,
-                           qcfg=qcfg)
+                           qcfg=qcfg, prefix_cache=not args.no_prefix_cache,
+                           block_size=args.block_size)
         print(json.dumps(rep))
 
 

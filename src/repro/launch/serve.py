@@ -88,6 +88,11 @@ def main():
     if eng.pack_stats:
         report["packed_weights"] = eng.pack_stats["n_packed"]
         report["compression"] = round(eng.pack_stats["compression"], 2)
+    if args.engine != "static":
+        stats = eng.prefix_stats()
+        if stats.get("enabled"):
+            report["prefix_hit_rate"] = round(stats["hit_rate"], 3)
+            report["prefill_tokens_saved"] = stats["saved_tokens"]
     print(json.dumps(report, indent=1))
     print("sample:", sample.tolist())
 

@@ -52,8 +52,8 @@ def chunked_attention(
     k: jnp.ndarray,  # (B, Skv, Hkv, Dh)
     v: jnp.ndarray,
     *,
-    q_pos: jnp.ndarray,  # (Sq,) int32
-    kv_pos: jnp.ndarray,  # (Skv,) int32; negative => padding
+    q_pos: jnp.ndarray,  # (Sq,) int32, or (B, Sq) per-slot
+    kv_pos: jnp.ndarray,  # (Skv,) int32, or (B, Skv) per-slot; neg => padding
     causal: bool,
     window: Optional[int],
     chunk: int,
@@ -62,34 +62,38 @@ def chunked_attention(
     skv, hkv = k.shape[1], k.shape[2]
     g = h // hkv
     chunk = min(chunk, skv)
+    # 2-D positions carry a per-batch (slot) row, e.g. a cached-prefix
+    # suffix prefill attending over a per-slot cache.
+    kp = kv_pos if kv_pos.ndim == 2 else kv_pos[None, :]  # (1 | B, Skv)
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None, :]  # (1 | B, Sq)
     if skv % chunk:
         pad = (-skv) % chunk
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+        kp = jnp.pad(kp, ((0, 0), (0, pad)), constant_values=-1)
         skv += pad
     n_chunks = skv // chunk
 
     qh = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32) * (dh ** -0.5)
     kc = k.reshape(b, n_chunks, chunk, hkv, dh)
     vc = v.reshape(b, n_chunks, chunk, hkv, dh)
-    pc = kv_pos.reshape(n_chunks, chunk)
+    pc = kp.reshape(kp.shape[0], n_chunks, chunk)
 
     def step(carry, xs):
         m, l, acc = carry
-        k_c, v_c, p_c = xs
+        k_c, v_c, p_c = xs  # p_c: (1 | B, chunk)
         s = jnp.einsum(
             "bqhgd,bkhd->bhgqk",
             qh,
             k_c.astype(jnp.float32),
             preferred_element_type=jnp.float32,
         )
-        valid = p_c[None, :] >= 0
+        valid = p_c[:, None, :] >= 0
         if causal:
-            valid &= p_c[None, :] <= q_pos[:, None]
+            valid = valid & (p_c[:, None, :] <= qp[:, :, None])
         if window is not None:
-            valid &= p_c[None, :] > q_pos[:, None] - window
-        s = jnp.where(valid[None, None, None], s, NEG_INF)
+            valid = valid & (p_c[:, None, :] > qp[:, :, None] - window)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -109,7 +113,8 @@ def chunked_attention(
     (m, l, acc), _ = jax.lax.scan(
         step,
         (m0, l0, a0),
-        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), pc),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         pc.transpose(1, 0, 2)),
     )
     out = acc / jnp.maximum(l[..., None], 1e-30)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
@@ -159,8 +164,20 @@ def attention_apply(
     ctx: Optional[jnp.ndarray] = None,  # cross-attn context (B, P, Dv)
     cache: Optional[dict] = None,
     cache_index: Optional[jnp.ndarray] = None,  # scalar int32 write offset
+    block_tables: Optional[jnp.ndarray] = None,  # (B, n_blocks) physical ids
+    attend_cache: bool = False,  # prefill: attend over the (prefix) cache
 ):
-    """Returns (out (B,S,D), new_cache_or_None)."""
+    """Returns (out (B,S,D), new_cache_or_None).
+
+    ``block_tables`` switches the decode path to block-table indirection:
+    the cache leaves are a physical-block arena ((n_blocks, block_size,
+    ...)) and row r's K/V is gathered through ``block_tables[r]`` — two
+    rows pointing at the same physical block share that KV (prefix
+    caching). ``attend_cache`` makes a multi-token prefill attend over the
+    *updated cache* instead of just its own K/V, which is what lets a
+    suffix prefill see a cached prompt prefix; the kv_pos >= 0 masking
+    contract is unchanged in both modes.
+    """
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     b, s, _ = x.shape
 
@@ -196,6 +213,34 @@ def attention_apply(
         kd = k.astype(cache["k"].dtype)
         vd = v.astype(cache["v"].dtype)
         new_pos = positions.astype(jnp.int32)
+        if jnp.ndim(idx) == 1 and block_tables is not None:
+            # block-table decode: the cache is a physical-block arena; row
+            # r's token lands in block idx[r] // bs at offset idx[r] % bs
+            # of whatever physical block its table maps it to. Attention
+            # then gathers the row's K/V *through the table*, so physical
+            # blocks shared between rows (cached prefixes) are read in
+            # place — zero copies, zero recompute.
+            assert s == 1 and per_slot, (s, per_slot)
+            nb = block_tables.shape[1]
+            bi = idx // cache_len  # logical block of each row's write
+            off = jnp.mod(idx, cache_len)
+            phys = jnp.take_along_axis(block_tables, bi[:, None],
+                                       axis=1)[:, 0]  # (B,)
+            ck = cache["k"].at[phys, off].set(kd[:, 0])
+            cv = cache["v"].at[phys, off].set(vd[:, 0])
+            cp = cache["pos"].at[phys, off].set(new_pos[:, 0])
+            gk = ck[block_tables].reshape((b, nb * cache_len) + ck.shape[2:])
+            gv = cv[block_tables].reshape((b, nb * cache_len) + cv.shape[2:])
+            # logical blocks mapped to the trash block (id 0: unallocated
+            # table tails, free slots) are invalid by definition — their
+            # positions must never enter the mask, whatever garbage the
+            # free-slot dummy writes left in block 0's pos plane
+            gp = jnp.where((block_tables == 0)[:, :, None], -1,
+                           cp[block_tables]).reshape(b, nb * cache_len)
+            out = full_attention(q, gk, gv, q_pos=positions, kv_pos=gp,
+                                 causal=causal, window=window)
+            y = dense(p["wo"], out.reshape(b, s, h * dh), cfg)
+            return y, {"k": ck, "v": cv, "pos": cp}
         if jnp.ndim(idx) == 1:
             # per-slot decode: row r writes token at its own position idx[r]
             assert s == 1 and per_slot, (s, per_slot)
@@ -244,6 +289,15 @@ def attention_apply(
             # decode: attend over the (ring) cache
             out = full_attention(q, ck, cv, q_pos=positions, kv_pos=cp,
                                  causal=causal, window=window)
+        elif attend_cache and s < cache_len:
+            # suffix prefill over a cached prompt prefix: the cache rows
+            # [0, cache_index) hold the shared-prefix K/V and the suffix
+            # was just written at [cache_index, cache_index + s), so the
+            # suffix queries attend over the whole updated cache (invalid
+            # entries are pos == -1 and masked as always).
+            out = chunked_attention(
+                q, ck, cv, q_pos=positions, kv_pos=cp, causal=causal,
+                window=window, chunk=cfg.attn_chunk)
         else:
             # whole-prompt prefill: the ring cache only retains the last
             # `cache_len` KVs, so early queries must attend over the full

@@ -83,7 +83,7 @@ class Model:
     # ------------------------------------------------------------------
 
     def _unit_apply(self, unit_params, x, *, positions, ctx, cache,
-                    cache_index):
+                    cache_index, block_tables=None, attend_cache=False):
         new_cache = {} if cache is not None else None
         aux_sum = jnp.zeros((), jnp.float32)
         for i, kind in enumerate(self.unit):
@@ -92,7 +92,8 @@ class Model:
             c = c if c else None  # empty dict => stateless block
             x, nc, aux = tfm.block_apply(
                 unit_params[key], x, self.cfg, kind, positions=positions,
-                ctx=ctx, cache=c, cache_index=cache_index)
+                ctx=ctx, cache=c, cache_index=cache_index,
+                block_tables=block_tables, attend_cache=attend_cache)
             if cache is not None:
                 new_cache[key] = nc if nc is not None else {}
             if "moe_aux" in aux:
@@ -100,13 +101,15 @@ class Model:
         return x, new_cache, aux_sum
 
     def _stack_apply(self, params, x, *, positions, ctx=None, cache=None,
-                     cache_index=None):
+                     cache_index=None, block_tables=None,
+                     attend_cache=False):
         cfg = self.cfg
 
         def unit_fn(x, unit_params, unit_cache):
             return self._unit_apply(
                 unit_params, x, positions=positions, ctx=ctx,
-                cache=unit_cache, cache_index=cache_index)
+                cache=unit_cache, cache_index=cache_index,
+                block_tables=block_tables, attend_cache=attend_cache)
 
         if cfg.parallel.remat == "full":
             unit_fn = jax.checkpoint(unit_fn)
@@ -160,20 +163,26 @@ class Model:
                 c = c if c else None
                 x, nc, aux = tfm.block_apply(
                     params["tail"][key], x, cfg, kind, positions=positions,
-                    ctx=ctx, cache=c, cache_index=cache_index)
+                    ctx=ctx, cache=c, cache_index=cache_index,
+                    block_tables=block_tables, attend_cache=attend_cache)
                 aux_total = aux_total + aux.get("moe_aux", 0.0)
                 if cache is not None:
                     new_cache["tail"][key] = nc if nc is not None else {}
         return x, new_cache, aux_total
 
     def apply(self, params, batch: Dict[str, jnp.ndarray], *, cache=None,
-              cache_index=None, last_only: bool = False):
+              cache_index=None, last_only: bool = False, last_index=None,
+              block_tables=None, attend_cache: bool = False):
         """Forward pass. batch: tokens (B,S) [or frames], optional patches.
 
         Returns (logits (B,S,V) — or (B,1,V) when last_only — new_cache,
         aux). ``last_only`` unembeds just the final position (prefill: the
         full-sequence logits are never needed, and the vocab-sharded
-        unembedding over 32k positions is pure waste).
+        unembedding over 32k positions is pure waste). ``last_index``
+        (scalar or (B,) int32) unembeds just that position per row instead
+        — bucket-padded prefills select the last *real* token.
+        ``block_tables`` / ``attend_cache`` thread through to the attention
+        cache paths (block-table decode / cached-prefix suffix prefill).
         """
         cfg = self.cfg
         dt = jnp.dtype(cfg.compute_dtype)
@@ -196,8 +205,13 @@ class Model:
         x = constrain(x, ("batch", "seq", "embed"))
         x, new_cache, aux = self._stack_apply(
             params, x, positions=positions, ctx=ctx, cache=cache,
-            cache_index=cache_index)
-        if last_only:
+            cache_index=cache_index, block_tables=block_tables,
+            attend_cache=attend_cache)
+        if last_index is not None:
+            b = x.shape[0]
+            idx = jnp.broadcast_to(jnp.asarray(last_index, jnp.int32), (b,))
+            x = x[jnp.arange(b), idx][:, None]
+        elif last_only:
             x = x[:, -1:]
         x = norm_apply(params["final_norm"], x, cfg)
         logits = unembed_apply(params["embed"], x, cfg)
@@ -232,12 +246,39 @@ class Model:
                                       last_only=True)
         return logits[:, -1], cache
 
-    def decode_step(self, params, token, cache, index):
+    def prefill_bucketed(self, params, batch, cache, last_index):
+        """Whole-prompt prefill over bucket-padded tokens: identical to
+        :meth:`prefill` except the returned logits are those of each row's
+        last *real* token (``last_index``, scalar or (B,)). Pad tokens sit
+        after every real token, so causal masking keeps real rows exact;
+        the caller must invalidate the pad positions the cache recorded
+        (``SlotKVCache.mask_pos_tail``) before the cache is decoded from."""
+        logits, cache, _ = self.apply(params, batch, cache=cache,
+                                      cache_index=jnp.int32(0),
+                                      last_index=last_index)
+        return logits[:, -1], cache
+
+    def prefill_suffix(self, params, batch, cache, prefix_len, last_index):
+        """Prefill a prompt *suffix* into cache rows [prefix_len,
+        prefix_len + S): the rows [0, prefix_len) already hold the
+        shared-prefix K/V (prefix cache hit), so attention runs over the
+        updated cache and the prefix is never recomputed. Returns the
+        logits of each row's last real token."""
+        logits, cache, _ = self.apply(
+            params, batch, cache=cache,
+            cache_index=jnp.asarray(prefix_len, jnp.int32),
+            last_index=last_index, attend_cache=True)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, token, cache, index, block_tables=None):
         """One decode step. token: (B, 1) int32; index: tokens-so-far — a
         scalar (lockstep batch) or a (B,) vector of per-slot positions
-        (continuous batching over a per-slot cache)."""
+        (continuous batching over a per-slot cache). ``block_tables``
+        ((B, n_blocks) int32) switches the cache to block-table
+        indirection over a physical-block arena (prefix caching)."""
         logits, cache, _ = self.apply(params, {"tokens": token}, cache=cache,
-                                      cache_index=index)
+                                      cache_index=index,
+                                      block_tables=block_tables)
         return logits[:, -1], cache
 
     # ------------------------------------------------------------------

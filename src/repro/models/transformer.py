@@ -121,6 +121,8 @@ def block_apply(
     ctx: Optional[jnp.ndarray] = None,
     cache: Optional[dict] = None,
     cache_index: Optional[jnp.ndarray] = None,
+    block_tables: Optional[jnp.ndarray] = None,
+    attend_cache: bool = False,
 ):
     """Returns (x, new_cache, aux)."""
     aux = {}
@@ -152,6 +154,8 @@ def block_apply(
         window=window,
         cache=cache,
         cache_index=cache_index,
+        block_tables=block_tables,
+        attend_cache=attend_cache,
     )
     x = x + h
 

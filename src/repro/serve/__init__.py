@@ -1,7 +1,9 @@
 from repro.serve.engine import ContinuousBatchingEngine, DecodeEngine
 from repro.serve.kv_cache import SlotKVCache
+from repro.serve.prefix_cache import BlockPool, RadixPrefixCache
 from repro.serve.quantized import pack_tree, packed_stats
 from repro.serve.scheduler import RequestScheduler
 
-__all__ = ["ContinuousBatchingEngine", "DecodeEngine", "RequestScheduler",
-           "SlotKVCache", "pack_tree", "packed_stats"]
+__all__ = ["BlockPool", "ContinuousBatchingEngine", "DecodeEngine",
+           "RadixPrefixCache", "RequestScheduler", "SlotKVCache",
+           "pack_tree", "packed_stats"]

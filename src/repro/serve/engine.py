@@ -32,6 +32,7 @@ from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
 from repro.serve.kv_cache import SlotKVCache
+from repro.serve.prefix_cache import BlockPool, RadixPrefixCache
 from repro.serve.quantized import pack_tree
 from repro.serve.scheduler import Finished, RequestScheduler
 
@@ -89,22 +90,59 @@ class ContinuousBatchingEngine:
     scheduler round (admit + prefill new slots, one batched decode step)
     and returns the requests that finished; ``drain()`` steps until idle.
     ``generate`` is the drop-in static-batch compatibility wrapper.
+
+    With ``prefix_cache=True`` (default, for families whose caches are
+    uniform attention ring buffers) the KV cache is a physical-block arena
+    behind per-slot block tables, and a :class:`RadixPrefixCache` maps
+    committed prompt prefixes to block chains: an admitted request
+    references the longest cached block-aligned prefix of its prompt
+    (refcount++, zero recompute) and prefills only the uncached suffix;
+    on completion its full blocks are committed back into the trie.
+    ``prefix_stats()`` reports hit rate and prefill tokens saved.
     """
 
     def __init__(self, cfg: ArchConfig, params: Any, max_len: int = 256,
                  n_slots: int = 4, packed: bool = False,
                  quant_cfg: Optional[QuantConfig] = None,
-                 cache_dtype: Any = jnp.float32):
+                 cache_dtype: Any = jnp.float32,
+                 prefix_cache: bool = True, block_size: int = 8,
+                 n_cache_blocks: Optional[int] = None,
+                 bucket_prompts: bool = True):
         self.cfg, self.params, self.pack_stats = _maybe_pack(
             cfg, params, packed, quant_cfg)
         self.max_len = max_len
         self.n_slots = n_slots
         self.model = Model(self.cfg)
-        self.cache = SlotKVCache(self.model, n_slots, max_len, cache_dtype)
+        uniform = SlotKVCache.supports_blocks(self.model, max_len)
+        # bucket padding is only sound for pure attention caches: the pad
+        # tokens' cache writes are masked out by pos. Stateful caches
+        # (mamba/rec) would absorb the pads into their recurrent state and
+        # a window-truncated ring could roll real KV out in their favor.
+        self.bucket_prompts = bucket_prompts and uniform
         self.scheduler = RequestScheduler(n_slots)
-        self._prefill = jax.jit(self.model.prefill)
+        if prefix_cache and uniform:
+            bps = -(-max_len // block_size)
+            extra = 2 * bps if n_cache_blocks is None else n_cache_blocks
+            n_blocks = n_slots * bps + extra + 1  # +1: trash block
+            self.cache = SlotKVCache(self.model, n_slots, max_len,
+                                     cache_dtype, block_size=block_size,
+                                     n_blocks=n_blocks)
+            self.prefix_cache: Optional[RadixPrefixCache] = RadixPrefixCache(
+                BlockPool(n_blocks, block_size))
+            self.scheduler.on_release = self._release_slot
+            self.scheduler.admission_priority = self._hit_score
+            self._slot_meta: Dict[int, dict] = {}
+        else:
+            # recurrent / window-truncated caches: contiguous per-slot rows
+            self.cache = SlotKVCache(self.model, n_slots, max_len,
+                                     cache_dtype)
+            self.prefix_cache = None
+        self._prefill_flat = jax.jit(self.model.prefill_bucketed)
+        self._prefill_sfx = jax.jit(self.model.prefill_suffix)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
         self._dummy_key = jax.random.key(0)
+        self._stat_prefill_tokens = 0
+        self._stat_saved_tokens = 0
 
     # -- request API ----------------------------------------------------
 
@@ -173,35 +211,160 @@ class ContinuousBatchingEngine:
 
     # -- internals ------------------------------------------------------
 
+    def prefix_stats(self) -> Dict[str, Any]:
+        """Prefix-cache health: hit rate, tokens saved vs computed, block
+        commits/evictions, arena occupancy."""
+        if self.prefix_cache is None:
+            return {"enabled": False,
+                    "prefill_tokens": self._stat_prefill_tokens,
+                    "saved_tokens": 0}
+        out = self.prefix_cache.stats()
+        out.update(enabled=True, block_size=self.cache.block_size,
+                   prefill_tokens=self._stat_prefill_tokens,
+                   saved_tokens=self._stat_saved_tokens,
+                   hit_tokens=self._stat_saved_tokens)
+        return out
+
+    # -- internals ------------------------------------------------------
+
+    def _hit_score(self, req) -> int:
+        """Cache-aware admission: expected cached-prefix tokens (0 for
+        requests with extra inputs, which never share prefixes)."""
+        if req.extra:
+            return 0
+        bs = self.cache.block_size
+        return bs * self.prefix_cache.peek_blocks(
+            req.prompt, max_blocks=(len(req.prompt) - 1) // bs)
+
+    def _bucket(self, s: int, prefix_len: int) -> int:
+        """Pad a (suffix) prefill length up to a power-of-two bucket so the
+        jit cache holds one entry per bucket, not one per distinct prompt
+        length. Clamped to the cache capacity past the prefix."""
+        cap = (self.cache.eff_len if self.prefix_cache is not None
+               else self.max_len) - prefix_len
+        if not self.bucket_prompts:
+            return s
+        return min(max(8, 1 << max(s - 1, 0).bit_length()), cap)
+
+    def _assign_blocks(self, admitted):
+        """Block-mode admission: match each request's prompt against the
+        radix trie, reference the cached prefix blocks, and allocate owned
+        blocks for the rest (evicting unreferenced LRU blocks on pressure).
+        Requests the pool cannot cover yet go back to the queue."""
+        pool = self.prefix_cache.pool
+        bs = self.cache.block_size
+        ok, failed = [], []
+        for slot, st in admitted:
+            req = st.req
+            s0 = len(req.prompt)
+            need = -(-(s0 + req.n_tokens) // bs)
+            # cap the match so at least one suffix token runs through the
+            # model — its logits seed generation
+            matched = ([] if req.extra else self.prefix_cache.match(
+                req.prompt, max_blocks=(s0 - 1) // bs))
+            pool.incref(matched)
+            own = need - len(matched)
+            if pool.n_free() < own:
+                self.prefix_cache.evict(own - pool.n_free())
+            ids = pool.alloc(own)
+            if ids is None:
+                self.prefix_cache.release(matched)
+                failed.append(slot)
+                continue
+            if not req.extra:
+                self.prefix_cache.count_lookup(matched)
+            pool.incref(ids)
+            self.cache.set_table(slot, matched + ids)
+            self._slot_meta[slot] = {"matched": matched, "owned": ids,
+                                     "need": need,
+                                     "prefix_blocks": len(matched)}
+            self._stat_saved_tokens += len(matched) * bs
+            ok.append((slot, st))
+        for slot in reversed(failed):  # appendleft: reverse keeps FIFO
+            self.scheduler.unadmit(slot)
+        return ok
+
+    def _release_slot(self, slot: int, st) -> None:
+        """Scheduler release hook (block mode): commit the request's full
+        token blocks into the trie, drop its block references, and point
+        the freed slot's table at the trash block so dummy decode writes
+        cannot touch live blocks."""
+        meta = self._slot_meta.pop(slot, None)
+        if meta is None:
+            return
+        if not st.req.extra:
+            # cache rows hold K/V for prompt + all *fed-back* tokens (the
+            # final sampled token never re-enters the model)
+            seq = np.concatenate(
+                [st.req.prompt, np.asarray(st.tokens[:-1], np.int32)])
+            n_commit = min(len(seq) // self.cache.block_size, meta["need"])
+            self.prefix_cache.commit(
+                seq, self.cache.block_tables[slot, :n_commit].tolist())
+        self.prefix_cache.release(meta["matched"] + meta["owned"])
+        self.cache.clear_table(slot)
+
     def _prefill_admitted(self, admitted) -> None:
-        # Group by prompt length (and extra-input signature, so requests
-        # with and without e.g. vlm patches never share a batch): one
-        # batched prefill per group keeps the jit shapes bounded and makes
-        # lockstep admission numerically identical to a static-batch
-        # prefill.
+        # Group by (prefix length, bucketed suffix length, extra-input
+        # signature — so requests with and without e.g. vlm patches never
+        # share a batch): one batched prefill per group keeps the jit
+        # shapes bounded and makes lockstep admission numerically identical
+        # to a static-batch prefill.
+        if self.prefix_cache is not None:
+            admitted = self._assign_blocks(admitted)
         groups: Dict[Any, list] = {}
         for slot, st in admitted:
             ex = st.req.extra
             sig = (tuple(sorted((k, np.shape(v)) for k, v in ex.items()))
                    if ex else None)
-            groups.setdefault((len(st.req.prompt), sig), []).append(
-                (slot, st))
-        for _, group in groups.items():
-            toks = jnp.asarray(
-                np.stack([st.req.prompt for _, st in group]), jnp.int32)
-            batch = {"tokens": toks}
+            pb = (self._slot_meta[slot]["prefix_blocks"]
+                  if self.prefix_cache is not None else 0)
+            p_len = pb * (self.cache.block_size or 0)
+            s_real = len(st.req.prompt) - p_len
+            groups.setdefault((p_len, self._bucket(s_real, p_len), sig),
+                              []).append((slot, st))
+        for (p_len, s_pad, _), group in groups.items():
+            g = len(group)
+            toks = np.zeros((g, s_pad), np.int32)
+            lasts = np.empty(g, np.int32)
+            for i, (_, st) in enumerate(group):
+                sfx = st.req.prompt[p_len:]
+                toks[i, :len(sfx)] = sfx
+                lasts[i] = len(sfx) - 1
+            batch = {"tokens": jnp.asarray(toks)}
             extras = [st.req.extra for _, st in group]
             if extras[0]:
                 for k in extras[0]:
                     batch[k] = jnp.asarray(
                         np.stack([ex[k] for ex in extras]))
-            cache = self.cache.fresh(len(group))
-            logits, cache = self._prefill(self.params, batch, cache)
-            self.cache.write_slots(cache, [slot for slot, _ in group])
+            last_idx = jnp.asarray(lasts)
+            self._stat_prefill_tokens += int(lasts.sum()) + g
+            if self.prefix_cache is not None:
+                meta = [self._slot_meta[slot] for slot, _ in group]
+                cache = self.cache.prefix_tree(
+                    [m["matched"] for m in meta], p_len)
+                if p_len:
+                    logits, cache = self._prefill_sfx(
+                        self.params, batch, cache, jnp.int32(p_len),
+                        last_idx)
+                else:
+                    logits, cache = self._prefill_flat(
+                        self.params, batch, cache, last_idx)
+                for i, (slot, st) in enumerate(group):
+                    self.cache.scatter_row(
+                        cache, i, meta[i]["owned"],
+                        meta[i]["prefix_blocks"],
+                        len(st.req.prompt) - p_len)
+            else:
+                cache = self.cache.fresh(g)
+                logits, cache = self._prefill_flat(
+                    self.params, batch, cache, last_idx)
+                cache = self.cache.mask_pos_tail(
+                    cache, [len(st.req.prompt) for _, st in group])
+                self.cache.write_slots(cache, [slot for slot, _ in group])
             keys = jnp.stack([st.req.key for _, st in group])
             temps = jnp.asarray(
                 [st.req.temperature for _, st in group], jnp.float32)
-            steps = jnp.zeros(len(group), jnp.int32)
+            steps = jnp.zeros(g, jnp.int32)
             first = np.asarray(sample_step(logits, keys, steps, temps))
             for (slot, _), tok in zip(group, first):
                 self.scheduler.record_prefill(slot, tok)
@@ -209,9 +372,14 @@ class ContinuousBatchingEngine:
     def _decode_once(self) -> None:
         toks, idxs, steps, temps, keys = self.scheduler.decode_batch(
             self._dummy_key)
-        logits, tree = self._decode(
-            self.params, jnp.asarray(toks)[:, None], self.cache.tree,
-            jnp.asarray(idxs))
+        if self.prefix_cache is not None:
+            logits, tree = self._decode(
+                self.params, jnp.asarray(toks)[:, None], self.cache.tree,
+                jnp.asarray(idxs), self.cache.tables_device())
+        else:
+            logits, tree = self._decode(
+                self.params, jnp.asarray(toks)[:, None], self.cache.tree,
+                jnp.asarray(idxs))
         self.cache.tree = tree
         nxt = sample_step(logits, jnp.stack(keys), jnp.asarray(steps),
                           jnp.asarray(temps))

@@ -1,18 +1,32 @@
-"""Slot-based paged KV cache for continuous batching.
+"""Slot-based KV cache for continuous batching: block arena + block tables.
 
-One batched cache tree holds ``n_slots`` independent request slots. The
-batch axis of every leaf is the slot axis (axis 1 under the scanned
-``blocks`` subtree — axis 0 there is the layer-stack — and axis 0 under the
-unrolled ``tail``). Each slot carries its own position plane
-(``pos`` of shape (n_slots, cache_len), built with ``per_slot=True``), so a
-new request can prefill into a free slot while the other slots keep
-decoding at different depths — the attention mask only ever admits entries
-whose ``pos`` row is valid (>= 0), which is what isolates slots from each
-other and from stale entries of evicted requests.
+Two layouts behind one class:
+
+* **Block mode** (the serving default, and what the prefix cache needs):
+  the KV arena is ``n_blocks`` physical blocks of ``block_size`` token
+  positions — every cache leaf's batch axis is the *physical block* axis
+  (``k``: (n_blocks, block_size, hkv, dh), ``pos``: (n_blocks,
+  block_size)). Each slot owns a row of ``block_tables`` mapping its
+  logical block ``i`` (token positions ``[i*bs, (i+1)*bs)``) to a physical
+  block, so the decode path gathers its K/V *through the table* and two
+  slots whose tables point at the same physical block share that KV with
+  zero copies. Block 0 is the trash block: free slots' table rows point at
+  it so their dummy decode writes land somewhere harmless.
+
+* **Legacy contiguous mode** (``block_size=None``): one batched cache tree
+  whose batch axis is the slot axis, as in the original engine. Retained
+  for families whose caches are not uniform attention ring buffers
+  (recurrent state, sliding-window) where block indirection does not apply.
+
+Either way each slot carries its own position plane and the attention mask
+only admits entries whose ``pos`` is valid (>= 0) — that masking contract
+is unchanged and is what isolates slots from each other, from stale
+entries, and from unwritten block tails.
 """
 from __future__ import annotations
 
-from typing import Any
+import collections
+from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,39 +34,89 @@ import numpy as np
 
 from repro.models import params as pp
 
-# batch (slot) axis per top-level cache subtree: the scanned "blocks" leaves
-# carry a leading layer-stack axis, the unrolled "tail" leaves do not.
+# batch axis per top-level cache subtree: the scanned "blocks" leaves carry
+# a leading layer-stack axis, the unrolled "tail" leaves do not.
 _SLOT_AXIS = {"blocks": 1, "tail": 0}
+
+_FRESH_MEMO_CAP = 8  # bounded zero-tree memo (keyed to bucketed sizes)
+
+
+def _is_attn_cache(d) -> bool:
+    return isinstance(d, dict) and set(d) == {"k", "v", "pos"}
 
 
 class SlotKVCache:
-    """Batched per-slot cache tree with scatter/gather on the slot axis."""
+    """Batched per-slot cache: block-table indirection or contiguous rows."""
 
     def __init__(self, model, n_slots: int, max_len: int,
-                 dtype: Any = jnp.float32):
+                 dtype: Any = jnp.float32, block_size: Optional[int] = None,
+                 n_blocks: Optional[int] = None):
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
         self.dtype = dtype
-        self._fresh: dict = {}  # batch -> constant zero-init tree
-        # live tree must not alias the memoized constant: the engine's
-        # decode jit donates its buffers
-        self.tree = jax.tree.map(jnp.copy, self.fresh(n_slots))
+        self.block_size = block_size
+        # bounded memo of constant zero-init trees, LRU on (batch, length)
+        self._fresh: collections.OrderedDict = collections.OrderedDict()
+        if block_size is None:
+            self.tree = jax.tree.map(jnp.copy, self.fresh(n_slots))
+            return
+        self.blocks_per_slot = -(-max_len // block_size)
+        self.eff_len = self.blocks_per_slot * block_size
+        # +1 for the reserved trash block; default arena leaves room for
+        # two slots' worth of cached-but-unreferenced prefix blocks
+        self.n_blocks = n_blocks or (
+            n_slots * self.blocks_per_slot + 2 * self.blocks_per_slot + 1)
+        arena = self.model.build_cache(self.n_blocks, block_size, self.dtype,
+                                       per_slot=True)
+        # live arena must not alias a memoized constant: decode donates it
+        self.tree = jax.tree.map(jnp.copy, pp.init_params(
+            arena, jax.random.key(0)))
+        self.block_tables = np.zeros((n_slots, self.blocks_per_slot),
+                                     np.int32)
+        self._tables_dev = None  # refreshed lazily after table mutations
 
-    def fresh(self, batch: int):
-        """A zero-initialized ``batch``-slot cache (pos planes all -1).
-        Memoized per batch size — the content is constant, jax arrays are
-        immutable, and prefill does not donate it, so admissions on the
-        serving hot path skip the rebuild + device fill."""
-        if batch not in self._fresh:
-            tree = self.model.build_cache(batch, self.max_len, self.dtype,
+    # -- shared helpers --------------------------------------------------
+
+    @staticmethod
+    def supports_blocks(model, max_len: int) -> bool:
+        """Block mode applies iff every cache leaf is a standard attention
+        ring cache spanning the full ``max_len`` (no recurrent state, no
+        window-truncated local attention)."""
+        spec = model.build_cache(1, max_len, per_slot=True)
+        for key, sub in spec.items():
+            if key not in _SLOT_AXIS:
+                return False
+            for blk in sub.values():
+                if not _is_attn_cache(blk):
+                    return False
+                if blk["k"].shape[-3] != max_len:
+                    return False
+        return True
+
+    def fresh(self, batch: int, length: Optional[int] = None):
+        """A zero-initialized ``batch``-row cache tree of ``length`` token
+        positions (pos planes all -1). Memoized — the content is constant,
+        jax arrays are immutable, and prefill does not donate it — with a
+        bounded LRU so distinct (bucketed) admission sizes cannot grow the
+        memo without bound."""
+        length = length or (self.eff_len if self.block_size else self.max_len)
+        key = (batch, length)
+        if key not in self._fresh:
+            tree = self.model.build_cache(batch, length, self.dtype,
                                           per_slot=True)
-            self._fresh[batch] = pp.init_params(tree, jax.random.key(0))
-        return self._fresh[batch]
+            self._fresh[key] = pp.init_params(tree, jax.random.key(0))
+            while len(self._fresh) > _FRESH_MEMO_CAP:
+                self._fresh.popitem(last=False)
+        self._fresh.move_to_end(key)
+        return self._fresh[key]
+
+    # -- legacy contiguous mode ------------------------------------------
 
     def write_slots(self, slot_tree, slots) -> None:
-        """Scatter a ``len(slots)``-slot tree into rows ``slots`` of the
-        live cache (used after prefilling admitted requests)."""
+        """Scatter a ``len(slots)``-row tree into rows ``slots`` of the
+        live cache (legacy mode, after prefilling admitted requests)."""
+        assert self.block_size is None
         slots = jnp.asarray(np.asarray(slots, np.int32))
         out = {}
         for key, sub in self.tree.items():
@@ -60,5 +124,109 @@ class SlotKVCache:
             out[key] = jax.tree.map(
                 lambda a, b, ax=axis: (a.at[slots].set(b) if ax == 0
                                        else a.at[:, slots].set(b)),
+                sub, slot_tree[key])
+        self.tree = out
+
+    @staticmethod
+    def mask_pos_tail(slot_tree, valid_lens: Sequence[int]):
+        """Invalidate (-1) each row's pos entries at index >= valid_lens[r]
+        — bucket-padded prefill writes positions for pad tokens too, and
+        those must never enter a future attention mask."""
+        valid = jnp.asarray(np.asarray(valid_lens, np.int32))
+
+        def fix(sub, axis):
+            def leaf(path, a):
+                if str(path[-1].key) != "pos":
+                    return a
+                idx = jnp.arange(a.shape[-1], dtype=jnp.int32)
+                keep = idx[None, :] < valid[:, None]  # (g, L)
+                if axis == 1:  # leading layer-stack axis
+                    keep = keep[None]
+                return jnp.where(keep, a, -1)
+            return jax.tree_util.tree_map_with_path(leaf, sub)
+
+        return {key: fix(sub, _SLOT_AXIS[key])
+                for key, sub in slot_tree.items()}
+
+    # -- block mode -------------------------------------------------------
+
+    def tables_device(self):
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self.block_tables)
+        return self._tables_dev
+
+    def set_table(self, slot: int, blocks: Sequence[int]) -> None:
+        """Point ``slot``'s logical blocks at physical ``blocks``; the rest
+        of the row falls back to the trash block 0."""
+        row = np.zeros(self.blocks_per_slot, np.int32)
+        row[:len(blocks)] = blocks
+        self.block_tables[slot] = row
+        self._tables_dev = None
+
+    def clear_table(self, slot: int) -> None:
+        self.block_tables[slot] = 0
+        self._tables_dev = None
+
+    def prefix_tree(self, block_ids: Sequence[Sequence[int]],
+                    prefix_len: int):
+        """A ``g``-row contiguous cache of ``eff_len`` positions whose rows
+        [0, prefix_len) are gathered from the arena blocks ``block_ids``
+        ((g, prefix_len//bs) physical ids) — the working tree for a
+        cached-prefix suffix prefill. prefix_len == 0 returns the memoized
+        fresh tree directly (safe: prefill does not donate its cache)."""
+        g = len(block_ids)
+        base = self.fresh(g)
+        if prefix_len == 0:
+            return base
+        ids = jnp.asarray(np.asarray(block_ids, np.int32).reshape(-1))
+
+        def graft(dst, src, axis):
+            if axis == 0:  # (n_blocks, bs, ...) -> rows (g, prefix, ...)
+                pref = src[ids].reshape((g, prefix_len) + src.shape[2:])
+                return dst.at[:, :prefix_len].set(pref)
+            # (layers, n_blocks, bs, ...) -> (layers, g, prefix, ...)
+            pref = src[:, ids].reshape(
+                (src.shape[0], g, prefix_len) + src.shape[3:])
+            return dst.at[:, :, :prefix_len].set(pref)
+
+        return {key: jax.tree.map(
+                    lambda d, s, ax=_SLOT_AXIS[key]: graft(d, s, ax),
+                    base[key], self.tree[key])
+                for key, sub in self.tree.items()}
+
+    def scatter_row(self, slot_tree, row: int, block_ids: Sequence[int],
+                    first_block: int, n_valid: int) -> None:
+        """Commit one prefilled row's suffix region into its owned arena
+        blocks: logical blocks [first_block, first_block + len(block_ids))
+        of ``slot_tree`` row ``row`` overwrite physical ``block_ids``. Pos
+        entries beyond ``n_valid`` tokens past the region start (bucket
+        padding, unwritten tail) are invalidated so they never match the
+        attention mask."""
+        if not block_ids:
+            return
+        bs = self.block_size
+        nb = len(block_ids)
+        lo, hi = first_block * bs, (first_block + nb) * bs
+        ids = jnp.asarray(np.asarray(block_ids, np.int32))
+        keep = (jnp.arange(hi - lo, dtype=jnp.int32) < n_valid)
+
+        def put(arena, src, axis, is_pos):
+            if axis == 0:
+                reg = src[row, lo:hi]
+                if is_pos:
+                    reg = jnp.where(keep, reg, -1)
+                return arena.at[ids].set(reg.reshape((nb, bs) + reg.shape[1:]))
+            reg = src[:, row, lo:hi]
+            if is_pos:
+                reg = jnp.where(keep[None], reg, -1)
+            return arena.at[:, ids].set(
+                reg.reshape((reg.shape[0], nb, bs) + reg.shape[2:]))
+
+        out = {}
+        for key, sub in self.tree.items():
+            axis = _SLOT_AXIS[key]
+            out[key] = jax.tree_util.tree_map_with_path(
+                lambda path, a, b, ax=axis: put(
+                    a, b, ax, str(path[-1].key) == "pos"),
                 sub, slot_tree[key])
         self.tree = out

@@ -56,6 +56,14 @@ class RequestScheduler:
         self._next_rid = 0
         self._finished: List[Finished] = []
         self._decoding: List[int] = []
+        # cache-aware admission: score queued requests (higher first, FIFO
+        # tie-break) when more are queued than slots are free — the engine
+        # plugs in expected prefix-cache hit length so requests that reuse
+        # cached KV are admitted while their blocks are still resident
+        self.admission_priority = None  # Optional[Callable[[Request], float]]
+        # engine hook, called with (slot, SlotState) when a request leaves
+        # its slot (prefix-cache block commit + refcount release)
+        self.on_release = None
 
     # ------------------------------------------------------------------
     # Admission
@@ -74,16 +82,40 @@ class RequestScheduler:
         return rid
 
     def admit(self) -> List[Tuple[int, SlotState]]:
-        """Move queued requests into free slots (in submission order)."""
+        """Move queued requests into free slots. Submission order, unless
+        ``admission_priority`` is set and the queue exceeds the free slots
+        — then the highest-scoring requests win (FIFO tie-break) while the
+        rest keep their relative order in the queue."""
+        free = [s for s in range(self.n_slots) if self.slots[s] is None]
+        if not free or not self.queue:
+            return []
+        if self.admission_priority is not None and len(self.queue) > len(free):
+            reqs = list(self.queue)
+            ranked = sorted(range(len(reqs)),
+                            key=lambda i: (-self.admission_priority(reqs[i]),
+                                           i))
+            chosen = set(ranked[:len(free)])
+            picked = [reqs[i] for i in sorted(chosen)]
+            self.queue = collections.deque(
+                reqs[i] for i in range(len(reqs)) if i not in chosen)
+        else:
+            picked = [self.queue.popleft()
+                      for _ in range(min(len(free), len(self.queue)))]
         admitted = []
-        for slot in range(self.n_slots):
-            if not self.queue:
-                break
-            if self.slots[slot] is None:
-                st = SlotState(self.queue.popleft())
-                self.slots[slot] = st
-                admitted.append((slot, st))
+        for slot, req in zip(free, picked):
+            st = SlotState(req)
+            self.slots[slot] = st
+            admitted.append((slot, st))
         return admitted
+
+    def unadmit(self, slot: int) -> None:
+        """Undo an admission (before any token was generated): the request
+        goes back to the front of the queue — the engine uses this when
+        the block pool cannot cover the request yet."""
+        st = self.slots[slot]
+        assert st is not None and st.n_gen == 0
+        self.slots[slot] = None
+        self.queue.appendleft(st.req)
 
     # ------------------------------------------------------------------
     # Token bookkeeping
@@ -146,6 +178,8 @@ class RequestScheduler:
             st.req.rid, st.req.prompt,
             np.asarray(st.tokens, np.int32)))
         self.slots[slot] = None  # evict: slot is immediately reusable
+        if self.on_release is not None:
+            self.on_release(slot, st)
 
     def pop_finished(self) -> List[Finished]:
         out, self._finished = self._finished, []

@@ -1,0 +1,248 @@
+"""Prefix-cache invariants and engine-level parity.
+
+Trie/pool level (plus hypothesis property tests when available):
+  * a matched prefix is always a chain of committed blocks from the root;
+  * refcounts never go negative; eviction never drops a referenced block
+    (or a non-leaf, which a later match would then miss).
+
+Engine level: with the prefix cache ON, output must be token-exact vs the
+cache-OFF path — shared-prefix workloads, staggered arrival, and eviction
+pressure included — while ``prefix_stats()`` reports real hits/savings.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import (BlockPool, ContinuousBatchingEngine, DecodeEngine,
+                         RadixPrefixCache)
+
+MAX_LEN = 48
+BS = 8  # block size used throughout
+
+
+# ---------------------------------------------------------------------------
+# BlockPool / RadixPrefixCache (pure host-side bookkeeping)
+# ---------------------------------------------------------------------------
+
+
+def _toks(rng, n):
+    return rng.integers(0, 512, (n,)).astype(np.int32)
+
+
+def test_match_is_committed_prefix(rng):
+    pool = BlockPool(32, BS)
+    trie = RadixPrefixCache(pool)
+    seq = _toks(rng, 3 * BS + 5)  # 3 full blocks + remainder
+    ids = pool.alloc(3)
+    pool.incref(ids)
+    trie.commit(seq, ids)
+    assert trie.match(seq) == ids
+    assert trie.match(seq[: 2 * BS + 3]) == ids[:2]  # partial block ignored
+    assert trie.match(seq, max_blocks=1) == ids[:1]
+    # diverging sequence matches only the shared block-aligned prefix
+    other = np.concatenate([seq[:BS], _toks(rng, 2 * BS)])
+    assert trie.match(other) == ids[:1]
+    assert trie.match(_toks(rng, 4 * BS)) == []
+
+
+def test_refcounts_never_negative(rng):
+    pool = BlockPool(8, BS)
+    ids = pool.alloc(2)
+    pool.incref(ids)
+    pool.decref(ids)
+    with pytest.raises(RuntimeError, match="negative"):
+        pool.decref(ids)
+
+
+def test_free_referenced_block_rejected():
+    pool = BlockPool(8, BS)
+    (b,) = pool.alloc(1)
+    pool.incref([b])
+    with pytest.raises(RuntimeError, match="referenced"):
+        pool.free([b])
+
+
+def test_eviction_skips_referenced_and_interior(rng):
+    pool = BlockPool(32, BS)
+    trie = RadixPrefixCache(pool)
+    seq = _toks(rng, 3 * BS)
+    ids = pool.alloc(3)
+    pool.incref(ids)
+    trie.commit(seq, ids)
+    # still slot-referenced: nothing is evictable
+    assert trie.evict(3) == 0
+    trie.release(ids)
+    # unreferenced: evictable leaf-first, so one evict takes the deepest
+    assert trie.evict(1) == 1
+    assert trie.match(seq) == ids[:2]
+    # evicting the rest clears the chain and returns blocks to the pool
+    assert trie.evict(10) == 2
+    assert trie.match(seq) == []
+    assert pool.n_free() == 31  # all but the trash block
+
+
+def test_lru_eviction_order(rng):
+    pool = BlockPool(32, BS)
+    trie = RadixPrefixCache(pool)
+    a, b = _toks(rng, BS), _toks(rng, BS)
+    (ia,) = pool.alloc(1)
+    (ib,) = pool.alloc(1)
+    pool.incref([ia])
+    pool.incref([ib])
+    trie.commit(a, [ia])
+    trie.commit(b, [ib])
+    trie.release([ia])
+    trie.release([ib])
+    trie.match(a)  # refresh a -> b is now LRU
+    assert trie.evict(1) == 1
+    assert trie.match(a) == [ia] and trie.match(b) == []
+
+
+def test_commit_keeps_existing_block(rng):
+    pool = BlockPool(32, BS)
+    trie = RadixPrefixCache(pool)
+    seq = _toks(rng, BS)
+    (ia,) = pool.alloc(1)
+    pool.incref([ia])
+    trie.commit(seq, [ia])
+    # a concurrent request that missed holds its own duplicate block
+    (ib,) = pool.alloc(1)
+    pool.incref([ib])
+    trie.commit(seq, [ib])  # chunk present: existing block ia wins
+    assert trie.match(seq) == [ia]
+    trie.release([ib])  # duplicate is not committed -> freed
+    assert ib in pool._free
+    trie.release([ia])
+    assert ia not in pool._free  # committed: cached, not freed
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity: prefix cache ON must be token-exact vs OFF
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    cfg = C.get_smoke("smollm-135m").replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    return cfg, params
+
+
+def _shared_prefix_prompts(rng, n, n_sys=2, sys_len=17):
+    cfg, _ = _setup()
+    sys_p = [rng.integers(0, cfg.vocab, (sys_len,)).astype(np.int32)
+             for _ in range(n_sys)]
+    return [np.concatenate([sys_p[i % n_sys],
+                            rng.integers(0, cfg.vocab,
+                                         (3 + i % 5,)).astype(np.int32)])
+            for i in range(n)]
+
+
+def _run(prompts, n_tok, temperature, prefix_cache, stagger=0, n_slots=3,
+         **kw):
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
+                                   n_slots=n_slots,
+                                   prefix_cache=prefix_cache,
+                                   block_size=BS, **kw)
+    rids = []
+    for i, p in enumerate(prompts):
+        if stagger and i and i % stagger == 0:
+            eng.step()  # admissions interleave with in-flight decode
+        rids.append(eng.submit(p, n_tok, temperature=temperature, seed=i))
+    out = eng.drain()
+    return eng, [out[r] for r in rids]
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_shared_prefix_token_exact_and_hits(rng, temperature):
+    prompts = _shared_prefix_prompts(rng, 6)
+    on, got = _run(prompts, 8, temperature, True)
+    _, want = _run(prompts, 8, temperature, False)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+    stats = on.prefix_stats()
+    assert stats["enabled"] and stats["hit_rate"] > 0
+    assert stats["saved_tokens"] > 0
+    assert stats["prefill_tokens"] < sum(len(p) for p in prompts)
+
+
+def test_staggered_arrival_parity(rng):
+    prompts = _shared_prefix_prompts(rng, 7)
+    on, got = _run(prompts, 6, 0.7, True, stagger=2)
+    _, want = _run(prompts, 6, 0.7, False, stagger=2)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+    assert on.prefix_stats()["hit_rate"] > 0
+
+
+def test_eviction_pressure_parity(rng):
+    # almost no spare arena: committed chains are evicted under pressure,
+    # and that must stay invisible in the tokens
+    prompts = [rng.integers(0, 512, (int(rng.integers(9, 20)),))
+               .astype(np.int32) for _ in range(8)]
+    on, got = _run(prompts, 6, 0.6, True, n_slots=2, n_cache_blocks=3)
+    _, want = _run(prompts, 6, 0.6, False, n_slots=2)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+    assert on.prefix_stats()["evictions"] > 0
+
+
+def test_repeat_prompt_skips_prefill_compute(rng):
+    """A repeated prompt must re-reference committed blocks: the second
+    pass prefills only the uncached suffix tokens."""
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=1,
+                                   prefix_cache=True, block_size=BS)
+    p = rng.integers(0, cfg.vocab, (2 * BS + 3,)).astype(np.int32)
+    r1 = eng.submit(p, 4, seed=0)
+    first = eng.drain()[r1]
+    t0 = eng.prefix_stats()["prefill_tokens"]
+    r2 = eng.submit(p, 4, seed=0)
+    second = eng.drain()[r2]
+    np.testing.assert_array_equal(first, second)
+    stats = eng.prefix_stats()
+    # 2 full blocks cached -> only len(p) - 2*BS suffix tokens computed
+    assert stats["prefill_tokens"] - t0 == len(p) - 2 * BS
+    assert stats["saved_tokens"] == 2 * BS
+
+
+def test_fresh_memo_is_bounded(rng):
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
+                                   prefix_cache=True, bucket_prompts=True)
+    for i, L in enumerate(range(4, 34, 2)):
+        eng.submit(rng.integers(0, cfg.vocab, (L,)).astype(np.int32), 2,
+                   seed=i)
+    eng.drain()
+    assert len(eng.cache._fresh) <= 8
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "recurrentgemma-2b"])
+def test_recurrent_family_falls_back_contiguous(rng, arch):
+    """Families with stateful / window-truncated caches must not get block
+    mode or bucket padding (pad tokens would corrupt recurrent state), and
+    must stay token-exact vs the static engine through the fallback."""
+    cfg = C.get_smoke(arch).replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    eng = ContinuousBatchingEngine(cfg, params, max_len=32, n_slots=2,
+                                   prefix_cache=True)
+    assert eng.prefix_cache is None and not eng.bucket_prompts
+    legacy = DecodeEngine(cfg, params, max_len=32, batch=2)
+    prompt = rng.integers(0, cfg.vocab, (2, 7)).astype(np.int32)
+    np.testing.assert_array_equal(
+        eng.generate(prompt, 6, temperature=0.7, seed=3),
+        legacy.generate(prompt, 6, temperature=0.7, seed=3))
+
+
+def test_prefix_stats_disabled_fallback(rng):
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
+                                   prefix_cache=False)
+    assert eng.prefix_stats() == {"enabled": False, "prefill_tokens": 0,
+                                  "saved_tokens": 0}
