@@ -1,0 +1,63 @@
+"""CI assertions over a serve_bench JSON report (``--json-out`` format).
+
+Replaces the old inline-heredoc CI step: given ``BENCH_serve.json`` (a
+dict keyed by workload), assert the serving stack's two headline wins are
+actually present in the run —
+
+* ``shared_prefix``: the radix prefix cache hit (hit_rate > 0) and saved
+  prefill tokens (prefill_tokens_saved > 0);
+* ``long_prompt``: chunked prefill bounded per-step latency — p95 step
+  wall time at least ``--min-speedup`` (default 2x) lower than the
+  unchunked pass recorded in the same report.
+
+Workloads absent from the report are skipped, so the script composes with
+any ``--workloads`` selection. Exits non-zero with a reason on failure.
+
+Usage: python benchmarks/check_bench.py BENCH_serve.json [--min-speedup 2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(results, min_speedup):
+    errors = []
+    sp = results.get("shared_prefix")
+    if sp is not None:
+        if not sp.get("hit_rate", 0) > 0:
+            errors.append(f"shared_prefix hit_rate not positive: {sp}")
+        if not sp.get("prefill_tokens_saved", 0) > 0:
+            errors.append(f"shared_prefix saved no prefill tokens: {sp}")
+    lp = results.get("long_prompt")
+    if lp is not None and "p95_step_speedup" in lp:
+        # absent with --no-prefix-cache (no chunked/unchunked comparison)
+        speedup = lp["p95_step_speedup"]
+        if not speedup >= min_speedup:
+            errors.append(
+                f"long_prompt p95 step speedup {speedup} < {min_speedup} "
+                f"(chunked {lp.get('p95_step_s')}s vs unchunked "
+                f"{lp.get('p95_step_s_unchunked')}s)")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report", help="serve_bench --json-out file")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="required p95 step-latency win of chunked over "
+                         "unchunked prefill on the long_prompt workload")
+    args = ap.parse_args()
+    with open(args.report) as f:
+        results = json.load(f)
+    errors = check(results, args.min_speedup)
+    for e in errors:
+        print(f"BENCH CHECK FAILED: {e}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    print(f"bench checks passed for {sorted(results)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,21 +8,18 @@ math (what the paper's tables measure) is exercised identically.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as C
-from repro.checkpoint import CheckpointManager
 from repro.configs.base import ArchConfig, QuantPolicy
 from repro.core.swis import QuantConfig
 from repro.data import SyntheticPipeline
-from repro.models import params as pp
 from repro.models.model import Model
 from repro.train.loop import Trainer
 

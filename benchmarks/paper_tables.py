@@ -2,11 +2,9 @@
 (name, us_per_call, derived) for the CSV printed by benchmarks.run."""
 from __future__ import annotations
 
-import math
 import time
 from typing import List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -55,7 +53,9 @@ def table1_rmse() -> List[Row]:
                     if g == 1 and m == "trunc":
                         g_eff = 1
                     cfg = QuantConfig(method=m, n_shifts=n, group_size=g)
-                    f = lambda: rmse(wj, fake_quant(wj, cfg))
+
+                    def f(cfg=cfg):
+                        return rmse(wj, fake_quant(wj, cfg))
                     us = time_us(f, n=1)
                     rows.append((f"table1/{lname}/g{g}/N{n}/{m}", us,
                                  f"{float(f()):.5f}"))
@@ -215,7 +215,6 @@ def table2_scheduling() -> List[Row]:
 # ---------------------------------------------------------------------------
 
 def table5_retraining() -> List[Row]:
-    import repro.configs as C
     from repro.train.loop import Trainer
 
     rows: List[Row] = []

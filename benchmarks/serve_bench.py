@@ -1,4 +1,4 @@
-"""Continuous-batching serve benchmark: tokens/sec at mixed prompt lengths.
+"""Continuous-batching serve benchmark: tokens/sec, per-step latency, TTFT.
 
 Workloads model the traffic shapes a serving fleet actually sees:
 
@@ -11,18 +11,33 @@ Workloads model the traffic shapes a serving fleet actually sees:
                  one of K long shared prefixes + a short unique tail) —
                  the shape the radix prefix cache exists for; the report
                  adds hit rate and prefill tokens avoided
+  long_prompt    a few very long prompts land while short requests decode —
+                 the head-of-line-blocking shape chunked prefill exists
+                 for; run twice (chunked + unchunked) and report the p95
+                 per-step latency each way plus the speedup
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--packed] \
           [--arch smollm-135m --n-slots 4 --requests 12] \
-          [--no-prefix-cache] [--block-size 8]
+          [--no-prefix-cache] [--block-size 8] [--prefill-chunk 32] \
+          [--json-out BENCH_serve.json] \
+          [--check-baseline benchmarks/baseline.json] [--update-baseline]
 
-Prints one JSON line per (workload, engine-config) with wall seconds and
-generated tokens/sec (plus prefix_stats fields when the cache is on).
+Prints one JSON line per (workload, engine-config) with wall seconds,
+generated tokens/sec, p50/p95 per-step wall time, and time-to-first-token
+percentiles (plus prefix_stats fields when the cache is on).
+
+``--json-out`` additionally writes one JSON object per workload (a dict
+keyed by workload name) — the CI perf trajectory artifact. With
+``--check-baseline`` the run exits non-zero if tokens/sec or p95 step
+latency regresses more than ``--baseline-tolerance`` (default 25%) vs the
+committed baseline; ``--update-baseline`` rewrites that baseline from the
+current run.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -35,6 +50,9 @@ from repro.models.model import Model
 from repro.serve import ContinuousBatchingEngine
 
 MAX_LEN = 64
+LONG_MAX_LEN = 512
+LONG_PREFILL_CHUNK = 32
+LONG_PROMPT_LEN = 14 * LONG_PREFILL_CHUNK  # 448 tokens, 14 chunks
 
 
 def _requests_uniform(rng, cfg, n):
@@ -66,41 +84,106 @@ def _requests_shared_prefix(rng, cfg, n, n_sys=3, sys_len=24):
     return out
 
 
+def _requests_long_prompt(rng, cfg, n):
+    """Prompts of 14x the chunk size arrive while short requests decode:
+    unchunked, each long prefill stalls every decoding slot for one
+    monolithic step; chunked, the same work lands 32 tokens at a time."""
+    n_long = max(1, min(4, n // 2))
+    out = []
+    for i in range(n_long):
+        prompt = rng.integers(0, cfg.vocab,
+                              (LONG_PROMPT_LEN,)).astype(np.int32)
+        out.append((prompt, 12, i * 4))
+    for i in range(max(0, n - n_long)):
+        prompt = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+        out.append((prompt, 12, i * 2))
+    return out
+
+
 WORKLOADS = {"uniform": _requests_uniform, "mixed": _requests_mixed,
-             "shared_prefix": _requests_shared_prefix}
+             "shared_prefix": _requests_shared_prefix,
+             "long_prompt": _requests_long_prompt}
+WORKLOAD_MAX_LEN = {"long_prompt": LONG_MAX_LEN}
 
 
 def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
-                 prefix_cache=True, block_size=8):
+                 prefix_cache=True, block_size=8, prefill_chunk=None,
+                 max_len=None, passes=3):
+    max_len = max_len or WORKLOAD_MAX_LEN.get(name, MAX_LEN)
+    if not prefix_cache:
+        prefill_chunk = None  # chunking needs block mode; degrade, not crash
     rng = np.random.default_rng(0)
     reqs = WORKLOADS[name](rng, cfg, requests)
     total_tokens = sum(n for _, n, _ in reqs)
 
+    eng = ContinuousBatchingEngine(cfg, params, max_len=max_len,
+                                   n_slots=n_slots, packed=packed,
+                                   quant_cfg=qcfg,
+                                   prefix_cache=prefix_cache,
+                                   block_size=block_size,
+                                   prefill_chunk=prefill_chunk)
+
     def one_pass():
-        eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
-                                       n_slots=n_slots, packed=packed,
-                                       quant_cfg=qcfg,
-                                       prefix_cache=prefix_cache,
-                                       block_size=block_size)
         pending = sorted(range(len(reqs)), key=lambda i: reqs[i][2])
         t0 = time.perf_counter()
+        submit_t = {}
+        first_t = {}
+        step_times = []
         step = 0
         done = 0
         while done < len(reqs):
             while pending and reqs[pending[0]][2] <= step:
                 i = pending.pop(0)
-                eng.submit(reqs[i][0], reqs[i][1])
-            done += len(eng.step())
+                rid = eng.submit(reqs[i][0], reqs[i][1])
+                submit_t[rid] = time.perf_counter()
+            t1 = time.perf_counter()
+            finished = eng.step()
+            t2 = time.perf_counter()
+            step_times.append(t2 - t1)
+            # first-token observation: live slots that have sampled, plus
+            # requests that finished within this very step
+            for st in eng.scheduler.slots:
+                if st is not None and st.n_gen >= 1:
+                    first_t.setdefault(st.req.rid, t2)
+            for f in finished:
+                first_t.setdefault(f.rid, t2)
+            done += len(finished)
             step += 1
-        return time.perf_counter() - t0, eng
+        wall = time.perf_counter() - t0
+        ttft = [first_t[r] - submit_t[r] for r in submit_t]
+        return wall, step_times, ttft
 
-    one_pass()  # warmup pass: all prefill/decode shapes compile here
-    dt, eng = one_pass()
+    # warmup pass compiles every prefill/decode shape; reset() keeps the
+    # jit caches, so the measured passes are steady-state serving. Each
+    # metric takes its best pass — host scheduling noise (GC, interrupts)
+    # only ever worsens a pass, while a real regression shifts them all.
+    one_pass()
+    best = None
+    for _ in range(passes):
+        eng.reset()
+        dt, step_times, ttft = one_pass()
+        steps = np.asarray(step_times)
+        ttft = np.asarray(ttft)
+        cur = {"wall_s": round(dt, 3),
+               "tok_per_s": round(total_tokens / dt, 1),
+               "steps": len(step_times),
+               "p50_step_s": round(float(np.percentile(steps, 50)), 5),
+               "p95_step_s": round(float(np.percentile(steps, 95)), 5),
+               "max_step_s": round(float(steps.max()), 5),
+               "ttft_p50_s": round(float(np.percentile(ttft, 50)), 5),
+               "ttft_p95_s": round(float(np.percentile(ttft, 95)), 5)}
+        if best is None:
+            best = cur
+        else:
+            best["tok_per_s"] = max(best["tok_per_s"], cur["tok_per_s"])
+            for k in ("wall_s", "p50_step_s", "p95_step_s", "max_step_s",
+                      "ttft_p50_s", "ttft_p95_s"):
+                best[k] = min(best[k], cur[k])
     rep = {"workload": name, "engine": "continuous", "packed": packed,
            "prefix_cache": eng.prefix_cache is not None,
+           "prefill_chunk": eng.prefill_chunk,
            "requests": len(reqs), "n_slots": n_slots,
-           "gen_tokens": total_tokens, "wall_s": round(dt, 3),
-           "tok_per_s": round(total_tokens / dt, 1)}
+           "gen_tokens": total_tokens, **best}
     stats = eng.prefix_stats()
     prompt_tokens = sum(len(p) for p, _, _ in reqs)
     rep["prompt_tokens"] = prompt_tokens
@@ -109,7 +192,48 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
         rep["hit_rate"] = round(stats["hit_rate"], 3)
         rep["prefill_tokens_saved"] = stats["saved_tokens"]
         rep["evictions"] = stats["evictions"]
+        rep["prefill_chunk_steps"] = stats["prefill_chunk_steps"]
     return rep
+
+
+GATED_FIELDS = (
+    # (field, direction: +1 means higher-is-better, -1 lower-is-better)
+    ("tok_per_s", +1),
+    ("p95_step_s", -1),
+)
+
+# --update-baseline records measured * headroom, not the raw measurement:
+# the committed baseline is the *floor of acceptable*, and the check
+# tolerance sits on top of it. CPU smoke numbers are noisy at the
+# millisecond scale and CI runners are slower than dev machines, and the
+# gate's job is catching step-function regressions (an order-of-magnitude
+# cliff), not re-measuring the trajectory — that is what the
+# BENCH_serve.json artifact records.
+BASELINE_HEADROOM = {"tok_per_s": 0.5, "p95_step_s": 2.0}
+
+
+def check_baseline(results, baseline, tolerance):
+    """Return a list of regression strings: any gated field more than
+    ``tolerance`` (fraction) worse than the committed baseline."""
+    regressions = []
+    for name, base in baseline.items():
+        cur = results.get(name)
+        if cur is None:
+            regressions.append(f"{name}: workload missing from this run")
+            continue
+        for field, sign in GATED_FIELDS:
+            if field not in base:
+                continue
+            want, got = float(base[field]), float(cur[field])
+            if sign > 0:
+                ok = got >= want * (1.0 - tolerance)
+            else:
+                ok = got <= want * (1.0 + tolerance)
+            if not ok:
+                regressions.append(
+                    f"{name}.{field}: {got} vs baseline {want} "
+                    f"(tolerance {tolerance:.0%})")
+    return regressions
 
 
 def main():
@@ -123,7 +247,23 @@ def main():
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="contiguous per-slot KV (no block sharing)")
     ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: at most this many prompt tokens "
+                         "per step (long_prompt defaults to "
+                         f"{LONG_PREFILL_CHUNK})")
+    ap.add_argument("--json-out", default=None,
+                    help="write one JSON object per workload to this file")
+    ap.add_argument("--check-baseline", default=None, metavar="PATH",
+                    help="fail if tok/s or p95 step latency regresses vs "
+                         "this baseline JSON")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --check-baseline PATH from this run")
+    ap.add_argument("--baseline-tolerance", type=float, default=0.25)
+    ap.add_argument("--passes", type=int, default=3,
+                    help="measured passes per workload (best-of)")
     args = ap.parse_args()
+    if args.update_baseline and not args.check_baseline:
+        ap.error("--update-baseline needs --check-baseline PATH to write")
 
     cfg = C.get_smoke(args.arch).replace(compute_dtype="float32")
     params = pp.init_params(Model(cfg).build(), jax.random.key(0))
@@ -134,12 +274,52 @@ def main():
     if unknown:
         ap.error(f"unknown workload(s) {unknown}; "
                  f"choose from {sorted(WORKLOADS)}")
+    common = dict(n_slots=args.n_slots, requests=args.requests,
+                  packed=args.packed, qcfg=qcfg,
+                  prefix_cache=not args.no_prefix_cache,
+                  block_size=args.block_size, passes=args.passes)
+    results = {}
     for name in names:
-        rep = run_workload(name, cfg, params, n_slots=args.n_slots,
-                           requests=args.requests, packed=args.packed,
-                           qcfg=qcfg, prefix_cache=not args.no_prefix_cache,
-                           block_size=args.block_size)
+        if name == "long_prompt" and not args.no_prefix_cache:
+            chunk = args.prefill_chunk or LONG_PREFILL_CHUNK
+            rep = run_workload(name, cfg, params, prefill_chunk=chunk,
+                               **common)
+            rep_un = run_workload(name, cfg, params, prefill_chunk=None,
+                                  **common)
+            rep["p95_step_s_unchunked"] = rep_un["p95_step_s"]
+            rep["p95_step_speedup"] = round(
+                rep_un["p95_step_s"] / rep["p95_step_s"], 2)
+            print(json.dumps(rep_un))
+        else:
+            rep = run_workload(name, cfg, params,
+                               prefill_chunk=args.prefill_chunk, **common)
         print(json.dumps(rep))
+        results[name] = rep
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    if args.check_baseline:
+        if args.update_baseline:
+            base = {name: {field: round(rep[field]
+                                        * BASELINE_HEADROOM[field], 5)
+                           for field, _ in GATED_FIELDS}
+                    for name, rep in results.items()}
+            with open(args.check_baseline, "w") as f:
+                json.dump(base, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"baseline updated: {args.check_baseline}", file=sys.stderr)
+            return
+        with open(args.check_baseline) as f:
+            baseline = json.load(f)
+        regressions = check_baseline(results, baseline,
+                                     args.baseline_tolerance)
+        if regressions:
+            for r in regressions:
+                print(f"PERF REGRESSION {r}", file=sys.stderr)
+            sys.exit(1)
+        print("baseline check passed", file=sys.stderr)
 
 
 if __name__ == "__main__":

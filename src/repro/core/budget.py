@@ -23,7 +23,6 @@ import dataclasses
 import heapq
 from typing import Dict, List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -20,13 +20,11 @@ Compression ratios (vs B-bit baseline, ignoring the shared scale):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.swis import QuantConfig, QuantizedWeight
+from repro.core.swis import QuantizedWeight
 
 
 def pack_bits_u32(bits: jnp.ndarray) -> jnp.ndarray:

@@ -57,8 +57,8 @@ def greedy_demotion(
     """
     levels = _check_costs(costs)
     c = len(costs[levels[0]])
-    hi = min(l for l in levels if l >= target + (step - 1e-9)) if any(
-        l >= target + step - 1e-9 for l in levels
+    hi = min(lv for lv in levels if lv >= target + (step - 1e-9)) if any(
+        lv >= target + step - 1e-9 for lv in levels
     ) else max(levels)
     cur = np.full(c, hi, np.int64)
     lo = min(levels)
@@ -117,7 +117,8 @@ def snap_to_groups(
 
     if best_seq is None:
         # Fall back to the uniform ceiling level (target not representable).
-        lvl = min((l for l in levels if l >= target), default=max(levels))
+        lvl = min((lv for lv in levels if lv >= target),
+                  default=max(levels))
         best_seq = tuple([lvl] * n_groups)
         best_cost = sum(costs[lvl][order].sum() for _ in range(1)) * 1.0
 
@@ -148,7 +149,7 @@ def schedule_layer(
     """
     step = 2 if double_shift else 1
     if double_shift:
-        levels = [l for l in levels if l % 2 == 0]
+        levels = [lv for lv in levels if lv % 2 == 0]
     costs = {n: np.asarray(cost_fn(n), np.float64) for n in levels}
     phase1 = greedy_demotion(costs, target, n_demote=n_demote, step=step)
     return snap_to_groups(phase1, costs, target, sa_cols=sa_cols, step=step)

@@ -19,7 +19,7 @@ a fixed random projection; VLM batches add deterministic patch embeddings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -12,7 +12,6 @@ jacobian-tested.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

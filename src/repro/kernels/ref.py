@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import PackedWeight, unpack_bits_u32
+from repro.core.packing import unpack_bits_u32
 
 
 def dequant_ref(

@@ -20,13 +20,11 @@ group size M; bn a multiple of 128 (lane width); bm a multiple of 8.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.packing import PackedWeight
 
 
 def _swis_matmul_kernel(

@@ -109,7 +109,8 @@ def _build_lowered(model_cfg: ArchConfig, shape: ShapeConfig, mesh, *,
             batch = model.input_specs(shape)
             batch_sh = rules.batch_specs(batch)
             if model_cfg.family == "encoder":
-                fn = lambda p, b: model.apply(p, b)[0]
+                def fn(p, b):
+                    return model.apply(p, b)[0]
                 lowered = jax.jit(fn, in_shardings=(psh, batch_sh)
                                   ).lower(params, batch)
             else:

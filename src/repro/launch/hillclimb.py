@@ -9,17 +9,14 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
-import json
-import re
 from collections import defaultdict
 
-import numpy as np
 
 import repro.configs as C
 from repro.configs.base import SHAPES
 from repro.core.swis import QuantConfig
 from repro.launch import roofline as RL
-from repro.launch.dryrun import _build_lowered, _compiled_costs, _shallow_cfg, lower_cell
+from repro.launch.dryrun import _build_lowered, _compiled_costs, _shallow_cfg
 from repro.launch.mesh import make_production_mesh
 from repro.configs.base import QuantPolicy
 

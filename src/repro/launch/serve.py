@@ -35,6 +35,9 @@ def main():
                     help="concurrent decode slots (continuous engine)")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: at most this many prompt tokens "
+                         "per engine step (continuous engine, block mode)")
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--n-shifts", type=int, default=4)
     ap.add_argument("--group-size", type=int, default=4)
@@ -73,7 +76,8 @@ def main():
     else:
         eng = ContinuousBatchingEngine(
             cfg, params, max_len=max_len, n_slots=args.n_slots,
-            packed=args.packed, quant_cfg=qcfg)
+            packed=args.packed, quant_cfg=qcfg,
+            prefill_chunk=args.prefill_chunk)
         rids = [eng.submit(p, args.tokens, temperature=args.temperature,
                            seed=i) for i, p in enumerate(prompts)]
         t0 = time.perf_counter()

@@ -80,7 +80,7 @@ def chunked_attention(
     pc = kp.reshape(kp.shape[0], n_chunks, chunk)
 
     def step(carry, xs):
-        m, l, acc = carry
+        m, denom, acc = carry
         k_c, v_c, p_c = xs  # p_c: (1 | B, chunk)
         s = jnp.einsum(
             "bqhgd,bkhd->bhgqk",
@@ -97,7 +97,7 @@ def chunked_attention(
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
-        l_new = l * alpha + jnp.sum(p, axis=-1)
+        denom_new = denom * alpha + jnp.sum(p, axis=-1)
         pv = jnp.einsum(
             "bhgqk,bkhd->bhgqd",
             p,
@@ -105,18 +105,18 @@ def chunked_attention(
             preferred_element_type=jnp.float32,
         )
         acc_new = acc * alpha[..., None] + pv
-        return (m_new, l_new, acc_new), None
+        return (m_new, denom_new, acc_new), None
 
     m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
     a0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, denom, acc), _ = jax.lax.scan(
         step,
         (m0, l0, a0),
         (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
          pc.transpose(1, 0, 2)),
     )
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
 
 
@@ -175,7 +175,8 @@ def attention_apply(
     rows pointing at the same physical block share that KV (prefix
     caching). ``attend_cache`` makes a multi-token prefill attend over the
     *updated cache* instead of just its own K/V, which is what lets a
-    suffix prefill see a cached prompt prefix; the kv_pos >= 0 masking
+    prefill chunk see everything committed before it — a cached prompt
+    prefix, previously prefilled chunks, or both; the kv_pos >= 0 masking
     contract is unchanged in both modes.
     """
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -290,11 +291,12 @@ def attention_apply(
             out = full_attention(q, ck, cv, q_pos=positions, kv_pos=cp,
                                  causal=causal, window=window)
         elif attend_cache and s < cache_len:
-            # suffix prefill over a cached prompt prefix: the cache rows
-            # [0, cache_index) hold the shared-prefix K/V and the suffix
-            # was just written at [cache_index, cache_index + s), so the
-            # suffix queries attend over the whole updated cache (invalid
-            # entries are pos == -1 and masked as always).
+            # chunk / suffix prefill past a committed position: the cache
+            # rows [0, cache_index) hold valid K/V (cached prefix and/or
+            # earlier chunks) and this chunk was just written at
+            # [cache_index, cache_index + s), so the chunk's queries
+            # attend over the whole updated cache (invalid entries are
+            # pos == -1 and masked as always).
             out = chunked_attention(
                 q, ck, cv, q_pos=positions, kv_pos=cp, causal=causal,
                 window=window, chunk=cfg.attn_chunk)

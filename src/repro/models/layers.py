@@ -6,7 +6,6 @@ feature of every architecture.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

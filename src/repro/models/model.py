@@ -7,9 +7,7 @@ patterns (griffin 1:2, vlm cross-every-5) stay scan-compatible.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -258,15 +256,20 @@ class Model:
                                       last_index=last_index)
         return logits[:, -1], cache
 
-    def prefill_suffix(self, params, batch, cache, prefix_len, last_index):
-        """Prefill a prompt *suffix* into cache rows [prefix_len,
-        prefix_len + S): the rows [0, prefix_len) already hold the
-        shared-prefix K/V (prefix cache hit), so attention runs over the
-        updated cache and the prefix is never recomputed. Returns the
-        logits of each row's last real token."""
+    def prefill_chunk(self, params, batch, cache, committed, last_index):
+        """Prefill the next chunk of a partially-committed prompt: write
+        the chunk's K/V into cache rows [committed, committed + S) and
+        attend over the whole updated cache — rows [0, committed) already
+        hold valid K/V (a cached prefix, previously prefilled chunks, or
+        both; invalid rows are pos == -1 and masked as always). This is
+        the single primitive behind both prefix-cache suffix prefill
+        (committed = cached prefix length) and chunked prefill (committed
+        advances one chunk at a time), bounding per-call work to the chunk
+        size. Returns the logits of each row's last real token
+        (``last_index``, chunk-relative)."""
         logits, cache, _ = self.apply(
             params, batch, cache=cache,
-            cache_index=jnp.asarray(prefix_len, jnp.int32),
+            cache_index=jnp.asarray(committed, jnp.int32),
             last_index=last_index, attend_cache=True)
         return logits[:, -1], cache
 

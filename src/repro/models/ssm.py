@@ -153,9 +153,9 @@ def _causal_conv(x, w, cache=None):
         xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
         new_cache = None
     out = jnp.zeros_like(x)
-    l = x.shape[1]
+    s = x.shape[1]
     for i in range(k):
-        out = out + xp[:, i : i + l] * w[i][None, None, :]
+        out = out + xp[:, i : i + s] * w[i][None, None, :]
     return out, new_cache
 
 

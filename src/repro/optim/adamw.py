@@ -6,7 +6,6 @@ sharding rules can FSDP-shard it leaf-by-leaf.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,8 @@ class AdamW:
     decay_min_ndim: int = 2
 
     def init(self, params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {"m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params)}
 

@@ -7,12 +7,13 @@ import jax.numpy as jnp
 
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def clip_by_global_norm(tree, max_norm: float):
     norm = global_norm(tree)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
-    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
-                        tree), norm
+    return jax.tree.map(
+        lambda a: (a.astype(jnp.float32) * scale).astype(a.dtype),
+        tree), norm

@@ -11,7 +11,6 @@ pod axis only, where links are the scarce resource.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

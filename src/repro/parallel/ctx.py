@@ -6,7 +6,6 @@ constraints are no-ops, so model code never depends on a mesh.
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
 
 _ACTIVE: list = []
 

@@ -101,8 +101,9 @@ def fig1_dram_ratio() -> List[Tuple[str, float]]:
 
     arr = SystolicArray(PE_LIBRARY["fixed8"])
     out = []
-    for l in NETWORKS["resnet18"]:
-        r = simulate_layer(arr, LayerShape.from_conv(l), n_shifts=8,
+    for layer in NETWORKS["resnet18"]:
+        r = simulate_layer(arr, LayerShape.from_conv(layer), n_shifts=8,
                            method="fixed8")
-        out.append((l.name, r["wgt_dram_bytes"] / max(r["act_dram_bytes"], 1)))
+        out.append((layer.name,
+                    r["wgt_dram_bytes"] / max(r["act_dram_bytes"], 1)))
     return out

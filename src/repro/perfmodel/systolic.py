@@ -28,7 +28,7 @@ from typing import Dict, List
 from repro.core.packing import compression_ratio
 from repro.perfmodel.networks import ConvLayer
 from repro.perfmodel.pe import (CLOCK_HZ, DRAM_PJ_PER_BYTE, PEConfig,
-                                SRAM_PJ_PER_BYTE, MAC8_PJ)
+                                SRAM_PJ_PER_BYTE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,9 +142,9 @@ def simulate_layer(arr: SystolicArray, shape: LayerShape, *,
 def simulate_network(arr: SystolicArray, layers: List[ConvLayer], *,
                      n_shifts: float, method: str) -> Dict[str, float]:
     tot: Dict[str, float] = {}
-    for l in layers:
-        r = simulate_layer(arr, LayerShape.from_conv(l), n_shifts=n_shifts,
-                           method=method)
+    for layer in layers:
+        r = simulate_layer(arr, LayerShape.from_conv(layer),
+                           n_shifts=n_shifts, method=method)
         for k, v in r.items():
             tot[k] = tot.get(k, 0.0) + v
     secs = tot["cycles"] / CLOCK_HZ

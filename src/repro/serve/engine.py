@@ -20,6 +20,7 @@ Two engines share the same model, packing path, and seeded sampler:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Dict, List, Optional
 
@@ -99,6 +100,17 @@ class ContinuousBatchingEngine:
     (refcount++, zero recompute) and prefills only the uncached suffix;
     on completion its full blocks are committed back into the trie.
     ``prefix_stats()`` reports hit rate and prefill tokens saved.
+
+    With ``prefill_chunk=N`` (block mode only) admitted prompts prefill at
+    most ``N`` tokens per ``step()``: the uncached part of each prompt is
+    split into fixed chunks, the slot sits in the scheduler's PREFILLING
+    phase while its chunks land, and every other slot keeps decoding each
+    step — per-step latency is bounded by one chunk of prefill plus one
+    batched decode regardless of prompt length, killing the head-of-line
+    blocking a monolithic prefill causes. Output is token-exact vs
+    unchunked prefill. ``prefill_backlog`` caps how many chunk-prefill
+    groups may be in flight before admission pauses (in-flight chunk work
+    the admission gate accounts for).
     """
 
     def __init__(self, cfg: ArchConfig, params: Any, max_len: int = 256,
@@ -107,7 +119,9 @@ class ContinuousBatchingEngine:
                  cache_dtype: Any = jnp.float32,
                  prefix_cache: bool = True, block_size: int = 8,
                  n_cache_blocks: Optional[int] = None,
-                 bucket_prompts: bool = True):
+                 bucket_prompts: bool = True,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_backlog: int = 2):
         self.cfg, self.params, self.pack_stats = _maybe_pack(
             cfg, params, packed, quant_cfg)
         self.max_len = max_len
@@ -129,20 +143,32 @@ class ContinuousBatchingEngine:
                                      n_blocks=n_blocks)
             self.prefix_cache: Optional[RadixPrefixCache] = RadixPrefixCache(
                 BlockPool(n_blocks, block_size))
-            self.scheduler.on_release = self._release_slot
-            self.scheduler.admission_priority = self._hit_score
+            self._wire_scheduler()
             self._slot_meta: Dict[int, dict] = {}
         else:
             # recurrent / window-truncated caches: contiguous per-slot rows
             self.cache = SlotKVCache(self.model, n_slots, max_len,
                                      cache_dtype)
             self.prefix_cache = None
+        if prefill_chunk is not None:
+            if self.prefix_cache is None:
+                raise ValueError(
+                    "prefill_chunk requires the block-mode prefix cache "
+                    "(uniform attention caches with prefix_cache=True)")
+            # chunk boundaries must be block-aligned so each chunk commits
+            # whole blocks into the arena as it lands
+            bs = self.cache.block_size
+            prefill_chunk = max(bs, -(-prefill_chunk // bs) * bs)
+        self.prefill_chunk = prefill_chunk
+        self.prefill_backlog = max(1, prefill_backlog)
+        self._prefill_groups: collections.deque = collections.deque()
         self._prefill_flat = jax.jit(self.model.prefill_bucketed)
-        self._prefill_sfx = jax.jit(self.model.prefill_suffix)
+        self._prefill_sfx = jax.jit(self.model.prefill_chunk)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
         self._dummy_key = jax.random.key(0)
         self._stat_prefill_tokens = 0
         self._stat_saved_tokens = 0
+        self._stat_chunk_steps = 0
 
     # -- request API ----------------------------------------------------
 
@@ -168,10 +194,15 @@ class ContinuousBatchingEngine:
                                      extra)
 
     def step(self) -> List[Finished]:
-        """Admit + prefill newly queued requests, then one decode step."""
-        admitted = self.scheduler.admit()
-        if admitted:
-            self._prefill_admitted(admitted)
+        """One scheduler round: admit queued requests (unless the chunked
+        backlog is full), run at most one chunk of prefill work, then one
+        batched decode step over the DECODING slots."""
+        if len(self._prefill_groups) < self.prefill_backlog:
+            admitted = self.scheduler.admit()
+            if admitted:
+                self._prefill_admitted(admitted)
+        if self._prefill_groups:
+            self._advance_chunk()
         if self.scheduler.needs_decode():
             self._decode_once()
         return self.scheduler.pop_finished()
@@ -209,7 +240,35 @@ class ContinuousBatchingEngine:
         out = self.drain()
         return np.stack([out[rid] for rid in rids])
 
+    def reset(self) -> None:
+        """Return an idle engine to its post-construction state (empty
+        queue, empty prefix cache, zeroed stats) *without* dropping the
+        jit caches — benchmarks measure steady-state serving by running a
+        warmup pass, resetting, and measuring the second pass on already
+        compiled shapes. Stale arena K/V is left in place: every
+        allocation path scrubs the blocks it takes over (whole-tree
+        scatter unchunked, ``invalidate_blocks`` chunked) before their
+        positions can enter a mask."""
+        if self.scheduler.pending():
+            raise RuntimeError("reset() requires an idle engine")
+        self.scheduler = RequestScheduler(self.n_slots)
+        self._prefill_groups.clear()
+        if self.prefix_cache is not None:
+            self.prefix_cache = RadixPrefixCache(
+                BlockPool(self.cache.n_blocks, self.cache.block_size))
+            self._wire_scheduler()
+            self._slot_meta = {}
+            for slot in range(self.n_slots):
+                self.cache.clear_table(slot)
+        self._stat_prefill_tokens = 0
+        self._stat_saved_tokens = 0
+        self._stat_chunk_steps = 0
+
     # -- internals ------------------------------------------------------
+
+    def _wire_scheduler(self) -> None:
+        self.scheduler.on_release = self._release_slot
+        self.scheduler.admission_priority = self._hit_score
 
     def prefix_stats(self) -> Dict[str, Any]:
         """Prefix-cache health: hit rate, tokens saved vs computed, block
@@ -217,12 +276,15 @@ class ContinuousBatchingEngine:
         if self.prefix_cache is None:
             return {"enabled": False,
                     "prefill_tokens": self._stat_prefill_tokens,
-                    "saved_tokens": 0}
+                    "saved_tokens": 0, "prefill_chunk": None,
+                    "prefill_chunk_steps": 0}
         out = self.prefix_cache.stats()
         out.update(enabled=True, block_size=self.cache.block_size,
                    prefill_tokens=self._stat_prefill_tokens,
                    saved_tokens=self._stat_saved_tokens,
-                   hit_tokens=self._stat_saved_tokens)
+                   hit_tokens=self._stat_saved_tokens,
+                   prefill_chunk=self.prefill_chunk,
+                   prefill_chunk_steps=self._stat_chunk_steps)
         return out
 
     # -- internals ------------------------------------------------------
@@ -274,7 +336,11 @@ class ContinuousBatchingEngine:
             if not req.extra:
                 self.prefix_cache.count_lookup(matched)
             pool.incref(ids)
-            self.cache.set_table(slot, matched + ids)
+            if self.prefill_chunk is None:
+                self.cache.set_table(slot, matched + ids)
+            # chunked mode: the table stays on the trash block until the
+            # last chunk lands — a PREFILLING slot's dummy decode row must
+            # not write into (possibly shared) live blocks
             self._slot_meta[slot] = {"matched": matched, "owned": ids,
                                      "need": need,
                                      "prefix_blocks": len(matched)}
@@ -311,6 +377,9 @@ class ContinuousBatchingEngine:
         # to a static-batch prefill.
         if self.prefix_cache is not None:
             admitted = self._assign_blocks(admitted)
+            if self.prefill_chunk is not None:
+                self._stage_chunked(admitted)
+                return
         groups: Dict[Any, list] = {}
         for slot, st in admitted:
             ex = st.req.extra
@@ -368,6 +437,127 @@ class ContinuousBatchingEngine:
             first = np.asarray(sample_step(logits, keys, steps, temps))
             for (slot, _), tok in zip(group, first):
                 self.scheduler.record_prefill(slot, tok)
+
+    def _stage_chunked(self, admitted) -> None:
+        """Stage admitted requests as chunk-prefill groups (no model work
+        yet — ``_advance_chunk`` runs one chunk per engine step). Grouping
+        key: (prefix length, chunk count, bucketed final-chunk length,
+        extra-input signature), so every row of a group advances through
+        the same chunk geometry in lockstep and one jit'd call per step
+        covers the whole group. The working tree is gathered once here
+        (cached prefix only) and carried across steps; chunk boundaries
+        are block-aligned, so each chunk commits whole blocks as it
+        lands."""
+        chunk = self.prefill_chunk
+        bs = self.cache.block_size
+        groups: Dict[Any, list] = {}
+        for slot, st in admitted:
+            ex = st.req.extra
+            sig = (tuple(sorted((k, np.shape(v)) for k, v in ex.items()))
+                   if ex else None)
+            p_len = self._slot_meta[slot]["prefix_blocks"] * bs
+            s_real = len(st.req.prompt) - p_len
+            n_chunks = -(-s_real // chunk)
+            tail = self._bucket(s_real - (n_chunks - 1) * chunk,
+                                p_len + (n_chunks - 1) * chunk)
+            groups.setdefault((p_len, n_chunks, tail, sig),
+                              []).append((slot, st))
+        for (p_len, n_chunks, tail, _), members in groups.items():
+            g = len(members)
+            s_pad = (n_chunks - 1) * chunk + tail
+            # the working tree only needs committed + padded-suffix rows,
+            # not the slot's full capacity — chunk attention stays O(chunk
+            # * committed) instead of O(chunk * eff_len). Rounded up to a
+            # pow2 (then a block multiple) so distinct prefix-hit lengths
+            # share jit cache entries instead of compiling per p_len.
+            need = p_len + s_pad
+            length = -(-(1 << max(need - 1, 0).bit_length()) // bs) * bs
+            length = min(self.cache.eff_len, max(length, bs))
+            toks = np.zeros((g, s_pad), np.int32)
+            lasts = np.empty(g, np.int32)
+            metas = []
+            for i, (slot, st) in enumerate(members):
+                meta = self._slot_meta[slot]
+                metas.append(meta)
+                sfx = st.req.prompt[p_len:]
+                toks[i, :len(sfx)] = sfx
+                lasts[i] = len(sfx) - (n_chunks - 1) * chunk - 1
+            # owned blocks commit chunk by chunk, so scrub their stale pos
+            # up front (one batched call): the not-yet-reached tail must
+            # never enter an attention mask (unchunked mode scrubs by
+            # scattering the whole fresh working tree instead)
+            self.cache.invalidate_blocks(
+                [b for m in metas for b in m["owned"]])
+            tree = self.cache.prefix_tree([m["matched"] for m in metas],
+                                          p_len, length=length)
+            self._prefill_groups.append({
+                "members": members, "metas": metas, "toks": toks,
+                "lasts": lasts, "p_len": p_len, "n_chunks": n_chunks,
+                "tail": tail, "done": 0, "tree": tree,
+                "extra": [st.req.extra for _, st in members]})
+
+    def _advance_chunk(self) -> None:
+        """Run one chunk of prefill for the head group, round-robin across
+        in-flight groups: prefill the chunk's tokens at the group's
+        committed offset, attend over everything committed so far, and
+        scatter the chunk's blocks into the arena. On the final chunk,
+        sample each row's first token and flip its slot to DECODING (its
+        block table goes live now, never earlier)."""
+        grp = self._prefill_groups[0]
+        chunk = self.prefill_chunk
+        bs = self.cache.block_size
+        k = grp["done"]
+        final = k == grp["n_chunks"] - 1
+        s_chunk = grp["tail"] if final else chunk
+        lo = k * chunk
+        g = len(grp["members"])
+        batch = {"tokens": jnp.asarray(grp["toks"][:, lo:lo + s_chunk])}
+        extras = grp["extra"]
+        if extras[0]:
+            for key in extras[0]:
+                batch[key] = jnp.asarray(
+                    np.stack([ex[key] for ex in extras]))
+        last_idx = (jnp.asarray(grp["lasts"]) if final
+                    else jnp.full((g,), s_chunk - 1, jnp.int32))
+        committed = grp["p_len"] + lo
+        self._stat_chunk_steps += 1
+        if committed == 0:
+            # first chunk of an uncached prompt: nothing committed, the
+            # chunk attends over its own K/V like a whole-prompt prefill
+            logits, tree = self._prefill_flat(self.params, batch,
+                                              grp["tree"], last_idx)
+        else:
+            logits, tree = self._prefill_sfx(self.params, batch,
+                                             grp["tree"],
+                                             jnp.int32(committed), last_idx)
+        grp["tree"] = tree
+        grp["done"] = k + 1
+        # append this chunk at its offset into each row's owned blocks
+        b0 = lo // bs
+        for i, (slot, st) in enumerate(grp["members"]):
+            meta = grp["metas"][i]
+            n_valid = min(len(st.req.prompt) - grp["p_len"] - lo, s_chunk)
+            nb = -(-n_valid // bs)
+            self.cache.scatter_row(tree, i, meta["owned"][b0:b0 + nb],
+                                   meta["prefix_blocks"] + b0, n_valid)
+        if not final:
+            # round-robin across in-flight groups: a 1-chunk group (short
+            # prompt) admitted behind a long prefill is serviced on the
+            # very next step instead of waiting out every long chunk
+            self._prefill_groups.rotate(-1)
+            return
+        self._prefill_groups.popleft()
+        for i, (slot, st) in enumerate(grp["members"]):
+            meta = grp["metas"][i]
+            self.cache.set_table(slot, meta["matched"] + meta["owned"])
+            self._stat_prefill_tokens += len(st.req.prompt) - grp["p_len"]
+        keys = jnp.stack([st.req.key for _, st in grp["members"]])
+        temps = jnp.asarray(
+            [st.req.temperature for _, st in grp["members"]], jnp.float32)
+        first = np.asarray(sample_step(logits, keys,
+                                       jnp.zeros(g, jnp.int32), temps))
+        for (slot, _), tok in zip(grp["members"], first):
+            self.scheduler.record_prefill(slot, tok)
 
     def _decode_once(self) -> None:
         toks, idxs, steps, temps, keys = self.scheduler.decode_batch(

@@ -26,7 +26,8 @@ entries, and from unwritten block tails.
 from __future__ import annotations
 
 import collections
-from typing import Any, List, Optional, Sequence
+import functools
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -167,15 +168,49 @@ class SlotKVCache:
         self.block_tables[slot] = 0
         self._tables_dev = None
 
+    def invalidate_blocks(self, block_ids: Sequence[int]) -> None:
+        """Set the pos plane of physical ``block_ids`` to -1 (K/V left as
+        garbage — masked by pos). Freshly allocated blocks may hold stale
+        positions from a previous owner; chunked prefill commits a slot's
+        blocks incrementally, so the blocks it has not reached yet must be
+        scrubbed up front rather than by one whole-table scatter. Jit'd
+        and donating, like ``scatter_row``; the id vector is padded to a
+        pow2 bucket with the trash block 0 (whose pos is garbage by
+        definition and masked at decode), so the jit cache holds one
+        entry per bucket, not one per distinct block count."""
+        if not len(block_ids):
+            return
+        ids = np.asarray(block_ids, np.int32)
+        bucket = 1 << max(len(ids) - 1, 0).bit_length()
+        ids = np.pad(ids, (0, bucket - len(ids)))
+        self.tree = self._invalidate(self.tree, jnp.asarray(ids))
+
+    @functools.cached_property
+    def _invalidate(self):
+        def fix(tree, ids):
+            def leaf(path, a, axis):
+                if str(path[-1].key) != "pos":
+                    return a
+                if axis == 0:
+                    return a.at[ids].set(-1)
+                return a.at[:, ids].set(-1)
+            return {key: jax.tree_util.tree_map_with_path(
+                        lambda p, a, ax=_SLOT_AXIS[key]: leaf(p, a, ax), sub)
+                    for key, sub in tree.items()}
+        return jax.jit(fix, donate_argnums=(0,))
+
     def prefix_tree(self, block_ids: Sequence[Sequence[int]],
-                    prefix_len: int):
-        """A ``g``-row contiguous cache of ``eff_len`` positions whose rows
-        [0, prefix_len) are gathered from the arena blocks ``block_ids``
-        ((g, prefix_len//bs) physical ids) — the working tree for a
-        cached-prefix suffix prefill. prefix_len == 0 returns the memoized
-        fresh tree directly (safe: prefill does not donate its cache)."""
+                    prefix_len: int, length: Optional[int] = None):
+        """A ``g``-row contiguous cache of ``length`` positions (default
+        ``eff_len``) whose rows [0, prefix_len) are gathered from the arena
+        blocks ``block_ids`` ((g, prefix_len//bs) physical ids) — the
+        working tree for prefilling past any committed position (a cached
+        prefix, or the chunks committed so far). ``length`` lets chunked
+        prefill attend over just committed + chunk instead of the full
+        slot capacity. prefix_len == 0 returns the memoized fresh tree
+        directly (safe: prefill does not donate its cache)."""
         g = len(block_ids)
-        base = self.fresh(g)
+        base = self.fresh(g, length)
         if prefix_len == 0:
             return base
         ids = jnp.asarray(np.asarray(block_ids, np.int32).reshape(-1))
@@ -196,37 +231,53 @@ class SlotKVCache:
 
     def scatter_row(self, slot_tree, row: int, block_ids: Sequence[int],
                     first_block: int, n_valid: int) -> None:
-        """Commit one prefilled row's suffix region into its owned arena
-        blocks: logical blocks [first_block, first_block + len(block_ids))
-        of ``slot_tree`` row ``row`` overwrite physical ``block_ids``. Pos
+        """Commit one prefilled row's region into its owned arena blocks:
+        logical blocks [first_block, first_block + len(block_ids)) of
+        ``slot_tree`` row ``row`` overwrite physical ``block_ids`` —
+        chunked prefill appends each chunk at its offset this way. Pos
         entries beyond ``n_valid`` tokens past the region start (bucket
         padding, unwritten tail) are invalidated so they never match the
-        attention mask."""
-        if not block_ids:
+        attention mask. Runs as a jit'd donating update (keyed on the
+        block count and the working-tree shape), so committing a chunk
+        costs one in-place arena write, not an eager whole-arena copy."""
+        if not len(block_ids):
             return
-        bs = self.block_size
-        nb = len(block_ids)
-        lo, hi = first_block * bs, (first_block + nb) * bs
-        ids = jnp.asarray(np.asarray(block_ids, np.int32))
-        keep = (jnp.arange(hi - lo, dtype=jnp.int32) < n_valid)
+        self.tree = self._scatter(
+            self.tree, slot_tree,
+            jnp.asarray(np.asarray(block_ids, np.int32)),
+            jnp.int32(row), jnp.int32(first_block * self.block_size),
+            jnp.int32(n_valid))
 
-        def put(arena, src, axis, is_pos):
-            if axis == 0:
-                reg = src[row, lo:hi]
-                if is_pos:
-                    reg = jnp.where(keep, reg, -1)
-                return arena.at[ids].set(reg.reshape((nb, bs) + reg.shape[1:]))
-            reg = src[:, row, lo:hi]
+    @functools.cached_property
+    def _scatter(self):
+        return jax.jit(functools.partial(_scatter_arena, bs=self.block_size),
+                       donate_argnums=(0,))
+
+
+def _scatter_arena(arena_tree, slot_tree, ids, row, lo, n_valid, *, bs):
+    """Jit body of :meth:`SlotKVCache.scatter_row`: write ``len(ids)``
+    blocks of ``slot_tree`` row ``row`` starting at token offset ``lo``
+    into physical arena blocks ``ids`` (pos masked past ``n_valid``)."""
+    nb = ids.shape[0]
+    keep = jnp.arange(nb * bs, dtype=jnp.int32) < n_valid
+
+    def put(arena, src, axis, is_pos):
+        if axis == 0:
+            reg = jax.lax.dynamic_slice_in_dim(src[row], lo, nb * bs, axis=0)
             if is_pos:
-                reg = jnp.where(keep[None], reg, -1)
-            return arena.at[:, ids].set(
-                reg.reshape((reg.shape[0], nb, bs) + reg.shape[2:]))
+                reg = jnp.where(keep, reg, -1)
+            return arena.at[ids].set(reg.reshape((nb, bs) + reg.shape[1:]))
+        reg = jax.lax.dynamic_slice_in_dim(src[:, row], lo, nb * bs, axis=1)
+        if is_pos:
+            reg = jnp.where(keep[None], reg, -1)
+        return arena.at[:, ids].set(
+            reg.reshape((reg.shape[0], nb, bs) + reg.shape[2:]))
 
-        out = {}
-        for key, sub in self.tree.items():
-            axis = _SLOT_AXIS[key]
-            out[key] = jax.tree_util.tree_map_with_path(
-                lambda path, a, b, ax=axis: put(
-                    a, b, ax, str(path[-1].key) == "pos"),
-                sub, slot_tree[key])
-        self.tree = out
+    out = {}
+    for key, sub in arena_tree.items():
+        axis = _SLOT_AXIS[key]
+        out[key] = jax.tree_util.tree_map_with_path(
+            lambda path, a, b, ax=axis: put(
+                a, b, ax, str(path[-1].key) == "pos"),
+            sub, slot_tree[key])
+    return out

@@ -9,13 +9,12 @@ bytes, which is where the paper's compression lands on TPU.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
 from repro.core import packing
 from repro.core.swis import QuantConfig, quantize
 

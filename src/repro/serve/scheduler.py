@@ -13,6 +13,13 @@ state. The engine drives it step-by-step:
 Slots are freed eagerly on completion, so a queued request can be admitted
 on the very next step while the remaining slots keep decoding — the
 mid-flight interleaving that a static batch engine cannot do.
+
+Request lifecycle: QUEUED (in the deque, no slot) -> PREFILLING (admitted
+into a slot, prompt not yet fully in the KV cache — with chunked prefill
+this spans several steps) -> DECODING (first token sampled, one token per
+decode step). PREFILLING slots are invisible to ``decode_batch`` /
+``needs_decode``: their KV is still being written chunk by chunk, so the
+other slots keep decoding around them.
 """
 from __future__ import annotations
 
@@ -33,12 +40,20 @@ class Request:
     extra: Optional[Dict[str, np.ndarray]] = None  # e.g. vlm patches
 
 
+# Slot phases. A request starts QUEUED (still in the deque — it has no
+# SlotState yet); admission creates its SlotState in PREFILLING; the first
+# sampled token moves it to DECODING.
+PREFILLING = "prefilling"
+DECODING = "decoding"
+
+
 @dataclasses.dataclass
 class SlotState:
     req: Request
     n_gen: int = 0  # tokens sampled so far (incl. the prefill token)
     last_tok: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)
+    phase: str = PREFILLING
 
 
 @dataclasses.dataclass
@@ -122,7 +137,10 @@ class RequestScheduler:
     # ------------------------------------------------------------------
 
     def record_prefill(self, slot: int, tok: int) -> None:
+        """The slot's prompt is fully in the cache and its first token is
+        sampled: PREFILLING -> DECODING (or straight to finished)."""
         st = self.slots[slot]
+        st.phase = DECODING
         if st.req.n_tokens == 0:  # degenerate: nothing to generate
             self._finish(slot)
             return
@@ -133,7 +151,8 @@ class RequestScheduler:
             self._finish(slot)
 
     def needs_decode(self) -> bool:
-        return any(st is not None and st.n_gen < st.req.n_tokens
+        return any(st is not None and st.phase == DECODING
+                   and st.n_gen < st.req.n_tokens
                    for st in self.slots)
 
     def decode_batch(self, dummy_key):
@@ -147,7 +166,10 @@ class RequestScheduler:
         keys = [dummy_key] * self.n_slots
         self._decoding = []
         for slot, st in enumerate(self.slots):
-            if st is None or st.n_gen >= st.req.n_tokens:
+            if (st is None or st.phase == PREFILLING
+                    or st.n_gen >= st.req.n_tokens):
+                # PREFILLING slots decode nothing: their block tables still
+                # point at the trash block, so the dummy row is harmless
                 continue
             self._decoding.append(slot)
             toks[slot] = st.last_tok

@@ -9,13 +9,11 @@ for every architecture family.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.models.model import Model
 from repro.optim import AdamW, clip_by_global_norm
 from repro.optim.compress import dequantize_grads, quantize_grads_int8

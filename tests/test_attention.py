@@ -1,5 +1,4 @@
 """Attention numerics: chunked online-softmax vs full softmax; windows; GQA."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,185 @@
+"""Chunked prefill: token-exactness vs unchunked prefill (the chunk
+schedule must be invisible in the output), chunk geometry edge cases
+(chunk not dividing the prompt, chunk boundaries crossing prefix-cache
+hits), and the liveness property the feature exists for — decode slots
+keep producing tokens while a long prompt is mid-prefill."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import ContinuousBatchingEngine
+from repro.serve.scheduler import DECODING, PREFILLING
+
+MAX_LEN = 96
+CHUNK = 16
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    cfg = C.get_smoke("smollm-135m").replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    return cfg, params
+
+
+def _prompt(rng, s0):
+    cfg, _ = _setup()
+    return rng.integers(0, cfg.vocab, (s0,)).astype(np.int32)
+
+
+def _engine(prefill_chunk=None, **kw):
+    cfg, params = _setup()
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("n_slots", 3)
+    return ContinuousBatchingEngine(cfg, params, prefill_chunk=prefill_chunk,
+                                    **kw)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_chunked_matches_unchunked(rng, temperature):
+    """Prompt lengths exercise every chunk geometry: shorter than one
+    chunk, a whole number of chunks, and chunk-not-dividing-prompt (70 =
+    4*16 + 6, 33 = 2*16 + 1)."""
+    lens = (70, 33, 16, 5)
+    prompts = [_prompt(rng, s0) for s0 in lens]
+
+    def run(chunk):
+        eng = _engine(chunk)
+        rids = [eng.submit(p, 8, temperature=temperature, seed=i)
+                for i, p in enumerate(prompts)]
+        out = eng.drain()
+        return [out[r] for r in rids]
+
+    for got, want in zip(run(CHUNK), run(None)):
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_chunked_staggered_matches_unchunked_lockstep(rng, temperature):
+    """A request joining while a long prompt is mid-chunk-prefill must not
+    change anyone's tokens vs an unchunked lockstep run."""
+    pa = _prompt(rng, 61)  # 3 full chunks + 13
+    pb = _prompt(rng, 9)
+
+    def run(chunk, stagger):
+        eng = _engine(chunk, n_slots=2)
+        out = {}
+        ra = eng.submit(pa, 8, temperature=temperature, seed=1)
+        rb = None
+        if not stagger:
+            rb = eng.submit(pb, 6, temperature=temperature, seed=2)
+        for _ in range(2):  # A is mid-prefill (chunked) or decoding
+            for f in eng.step():
+                out[f.rid] = f.tokens
+        if stagger:
+            rb = eng.submit(pb, 6, temperature=temperature, seed=2)
+        for rid, full in eng.drain().items():
+            s0 = len(pa) if rid == ra else len(pb)
+            out[rid] = full[s0:]
+        return out[ra], out[rb]
+
+    a_ref, b_ref = run(None, stagger=False)
+    for stagger in (False, True):
+        a, b = run(CHUNK, stagger=stagger)
+        np.testing.assert_array_equal(a, a_ref)
+        np.testing.assert_array_equal(b, b_ref)
+
+
+def test_chunk_boundaries_cross_prefix_cache_hits(rng):
+    """Second request shares a 40-token prefix (not chunk-aligned: 40 =
+    2*16 + 8): its suffix chunks start mid-stream at the cached-block
+    boundary and must still reproduce the no-cache tokens exactly."""
+    shared = _prompt(rng, 40)
+    tails = [_prompt(rng, 11), _prompt(rng, 3)]
+    prompts = [np.concatenate([shared, t]) for t in tails]
+
+    eng = _engine(CHUNK, n_slots=2)
+    outs = []
+    for i, p in enumerate(prompts):
+        rid = eng.submit(p, 6, seed=i)
+        outs.append(eng.drain()[rid])  # drain so the first commits blocks
+    stats = eng.prefix_stats()
+    assert stats["hit_rate"] > 0
+    assert stats["saved_tokens"] > 0
+
+    ref = _engine(None, n_slots=2, prefix_cache=False)
+    for i, (p, got) in enumerate(zip(prompts, outs)):
+        rid = ref.submit(p, 6, seed=i)
+        np.testing.assert_array_equal(got, ref.drain()[rid])
+
+
+def test_decode_continues_while_long_prompt_prefills(rng):
+    """The point of chunked prefill: a decoding slot keeps producing one
+    token per step on every step the long prompt spends in PREFILLING."""
+    eng = _engine(CHUNK, n_slots=2)
+    rs = eng.submit(_prompt(rng, 6), 40, seed=3)
+    eng.step()
+    slot_short = next(s for s, st in enumerate(eng.scheduler.slots)
+                      if st is not None and st.req.rid == rs)
+    rl = eng.submit(_prompt(rng, 80), 4, seed=4)  # 5 chunks of 16
+
+    phases, gens = [], []
+    for _ in range(8):
+        eng.step()
+        long_states = [st for st in eng.scheduler.slots
+                       if st is not None and st.req.rid == rl]
+        phases.append(long_states[0].phase if long_states else "gone")
+        gens.append(eng.scheduler.slots[slot_short].n_gen)
+    prefill_steps = [i for i, ph in enumerate(phases) if ph == PREFILLING]
+    assert len(prefill_steps) >= 3  # the long prompt spent steps chunking
+    assert DECODING in phases  # and eventually flipped to decode
+    for i in prefill_steps:
+        # the short slot gained a token on every one of those steps
+        if i == 0:
+            assert gens[0] >= 2
+        else:
+            assert gens[i] == gens[i - 1] + 1
+
+
+def test_prefilling_slots_invisible_to_decode(rng):
+    """While chunks land, the slot is PREFILLING, produced no tokens, and
+    its block table still points at the trash block (decode dummy rows
+    must not write into live blocks)."""
+    eng = _engine(CHUNK, n_slots=2)
+    rid = eng.submit(_prompt(rng, 80), 4, seed=0)
+    eng.step()
+    (slot, st), = [(s, st) for s, st in enumerate(eng.scheduler.slots)
+                   if st is not None]
+    assert st.req.rid == rid and st.phase == PREFILLING
+    assert st.n_gen == 0 and not st.tokens
+    assert not eng.scheduler.needs_decode()
+    assert np.all(eng.cache.block_tables[slot] == 0)
+    eng.drain()
+
+
+def test_chunk_requires_block_mode(rng):
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
+                                 prefix_cache=False, prefill_chunk=CHUNK)
+
+
+def test_chunk_rounds_up_to_block_multiple(rng):
+    eng = _engine(prefill_chunk=9, block_size=8)
+    assert eng.prefill_chunk == 16
+    rid = eng.submit(_prompt(rng, 40), 4, seed=0)
+    out = eng.drain()
+    assert out[rid].shape == (44,)
+
+
+def test_reset_reuses_engine(rng):
+    """reset() returns an idle engine to a fresh state: same submissions
+    reproduce the same tokens, and prefix stats start from zero."""
+    eng = _engine(CHUNK, n_slots=2)
+    p = _prompt(rng, 40)
+    r0 = eng.submit(p, 6, seed=0)
+    first = eng.drain()[r0]
+    assert eng.prefix_stats()["prefill_tokens"] > 0
+    eng.reset()
+    assert eng.prefix_stats()["prefill_tokens"] == 0
+    r1 = eng.submit(p, 6, seed=0)
+    np.testing.assert_array_equal(eng.drain()[r1], first)

@@ -1,7 +1,6 @@
 """Bit-plane packing + compression math (paper §3.3, Fig. 5)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import packing
 

@@ -1,5 +1,4 @@
 """Analytical perfmodel: paper-claim reproduction + monotonicity."""
-import pytest
 
 from repro.perfmodel import NETWORKS, PE_LIBRARY, SystolicArray, simulate_network
 from repro.perfmodel.evaluate import evaluate_table4, fig1_dram_ratio, headline_ratios

@@ -245,4 +245,5 @@ def test_prefix_stats_disabled_fallback(rng):
     eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
                                    prefix_cache=False)
     assert eng.prefix_stats() == {"enabled": False, "prefill_tokens": 0,
-                                  "saved_tokens": 0}
+                                  "saved_tokens": 0, "prefill_chunk": None,
+                                  "prefill_chunk_steps": 0}

@@ -1,6 +1,5 @@
 """Offline filter scheduling (§4.3): two-phase heuristic invariants."""
 import numpy as np
-import pytest
 
 from repro.core import scheduling
 

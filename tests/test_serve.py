@@ -82,7 +82,7 @@ def test_queue_beyond_capacity_recycles_slots(rng):
     match a solo run (slot recycling and eviction are invisible)."""
     cfg, params = _setup()
     lens = (4, 6, 6, 9, 5)
-    prompts = [_prompts(rng, 1, l)[0] for l in lens]
+    prompts = [_prompts(rng, 1, n)[0] for n in lens]
     eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2)
     rids = [eng.submit(p, 7, seed=i) for i, p in enumerate(prompts)]
     out = eng.drain()

@@ -1,7 +1,5 @@
 """Sharding rules + roofline parsing (no multi-device mesh needed)."""
 import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as PS
 
 import repro.configs as C
