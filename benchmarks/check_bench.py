@@ -1,14 +1,22 @@
 """CI assertions over a serve_bench JSON report (``--json-out`` format).
 
 Replaces the old inline-heredoc CI step: given ``BENCH_serve.json`` (a
-dict keyed by workload), assert the serving stack's two headline wins are
+dict keyed by workload), assert the serving stack's headline wins are
 actually present in the run —
 
 * ``shared_prefix``: the radix prefix cache hit (hit_rate > 0) and saved
   prefill tokens (prefill_tokens_saved > 0);
 * ``long_prompt``: chunked prefill bounded per-step latency — p95 step
   wall time at least ``--min-speedup`` (default 2x) lower than the
-  unchunked pass recorded in the same report.
+  unchunked pass recorded in the same report. The speedup field is
+  *required*: a report that silently lost the chunked/unchunked
+  comparison (e.g. a --no-prefix-cache run fed to CI by mistake) fails
+  instead of passing vacuously. ``--allow-missing-speedup`` restores the
+  old skip for runs where the comparison is knowingly absent;
+* ``decode_heavy``: the fused paged-decode pass must not materialize
+  gathered K/V and its p95 step latency must be no worse than the gather
+  reference pass (``--min-paged-speedup``, default 1.0, with a small
+  tolerance for CPU timer noise).
 
 Workloads absent from the report are skipped, so the script composes with
 any ``--workloads`` selection. Exits non-zero with a reason on failure.
@@ -22,7 +30,8 @@ import json
 import sys
 
 
-def check(results, min_speedup):
+def check(results, min_speedup, min_paged_speedup=1.0,
+          allow_missing_speedup=False, noise_tolerance=0.1):
     errors = []
     sp = results.get("shared_prefix")
     if sp is not None:
@@ -31,14 +40,42 @@ def check(results, min_speedup):
         if not sp.get("prefill_tokens_saved", 0) > 0:
             errors.append(f"shared_prefix saved no prefill tokens: {sp}")
     lp = results.get("long_prompt")
-    if lp is not None and "p95_step_speedup" in lp:
-        # absent with --no-prefix-cache (no chunked/unchunked comparison)
-        speedup = lp["p95_step_speedup"]
-        if not speedup >= min_speedup:
+    if lp is not None:
+        if "p95_step_speedup" not in lp:
+            if not allow_missing_speedup:
+                errors.append(
+                    "long_prompt has no p95_step_speedup (chunked vs "
+                    "unchunked comparison missing — was this a "
+                    "--no-prefix-cache run?); pass "
+                    "--allow-missing-speedup if that is intentional")
+        else:
+            speedup = lp["p95_step_speedup"]
+            if not speedup >= min_speedup:
+                errors.append(
+                    f"long_prompt p95 step speedup {speedup} < "
+                    f"{min_speedup} (chunked {lp.get('p95_step_s')}s vs "
+                    f"unchunked {lp.get('p95_step_s_unchunked')}s)")
+    dh = results.get("decode_heavy")
+    if dh is not None:
+        if dh.get("materializes_gathered_kv", True):
             errors.append(
-                f"long_prompt p95 step speedup {speedup} < {min_speedup} "
-                f"(chunked {lp.get('p95_step_s')}s vs unchunked "
-                f"{lp.get('p95_step_s_unchunked')}s)")
+                f"decode_heavy fused pass materializes gathered K/V "
+                f"(paged_impl={dh.get('paged_impl')!r}) — the paged "
+                f"kernel was not in effect")
+        if "paged_p95_speedup" not in dh:
+            if not allow_missing_speedup:
+                errors.append(
+                    "decode_heavy has no paged_p95_speedup (fused vs "
+                    "gather comparison missing); pass "
+                    "--allow-missing-speedup if that is intentional")
+        else:
+            speedup = dh["paged_p95_speedup"]
+            floor = min_paged_speedup * (1.0 - noise_tolerance)
+            if not speedup >= floor:
+                errors.append(
+                    f"decode_heavy paged p95 step speedup {speedup} < "
+                    f"{min_paged_speedup} (fused {dh.get('p95_step_s')}s "
+                    f"vs gather {dh.get('p95_step_s_gather')}s)")
     return errors
 
 
@@ -48,10 +85,18 @@ def main():
     ap.add_argument("--min-speedup", type=float, default=2.0,
                     help="required p95 step-latency win of chunked over "
                          "unchunked prefill on the long_prompt workload")
+    ap.add_argument("--min-paged-speedup", type=float, default=1.0,
+                    help="required p95 step-latency ratio of the gather "
+                         "reference over the fused paged decode on the "
+                         "decode_heavy workload (1.0 = no worse)")
+    ap.add_argument("--allow-missing-speedup", action="store_true",
+                    help="skip (rather than fail) speedup assertions when "
+                         "the comparison fields are absent from the report")
     args = ap.parse_args()
     with open(args.report) as f:
         results = json.load(f)
-    errors = check(results, args.min_speedup)
+    errors = check(results, args.min_speedup, args.min_paged_speedup,
+                   args.allow_missing_speedup)
     for e in errors:
         print(f"BENCH CHECK FAILED: {e}", file=sys.stderr)
     if errors:

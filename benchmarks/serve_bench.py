@@ -15,6 +15,12 @@ Workloads model the traffic shapes a serving fleet actually sees:
                  the head-of-line-blocking shape chunked prefill exists
                  for; run twice (chunked + unchunked) and report the p95
                  per-step latency each way plus the speedup
+  decode_heavy   many slots decoding against long committed contexts with
+                 almost no prefill — the shape where the reference decode
+                 path's per-step gathered K/V copy dominates; run twice
+                 (fused paged kernel + gather reference) and report p50/p95
+                 step latency each way plus the per-step gathered bytes
+                 each path materializes
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--packed] \
           [--arch smollm-135m --n-slots 4 --requests 12] \
@@ -53,6 +59,9 @@ MAX_LEN = 64
 LONG_MAX_LEN = 512
 LONG_PREFILL_CHUNK = 32
 LONG_PROMPT_LEN = 14 * LONG_PREFILL_CHUNK  # 448 tokens, 14 chunks
+HEAVY_MAX_LEN = 192
+HEAVY_PREFIX_LEN = 120  # 15 blocks of committed context per request
+HEAVY_N_SLOTS = 8
 
 
 def _requests_uniform(rng, cfg, n):
@@ -100,16 +109,51 @@ def _requests_long_prompt(rng, cfg, n):
     return out
 
 
+def _requests_decode_heavy(rng, cfg, n):
+    """Every slot decodes a long tail against a long committed context:
+    one shared long prefix (cached after the first admission) + a few
+    unique tokens, then a deep decode. Prefill is a sliver of the work;
+    the steady state is all slots deep in paged decode — the shape where
+    the gather path re-materializes the whole arena view every step."""
+    prefix = rng.integers(0, cfg.vocab,
+                          (HEAVY_PREFIX_LEN,)).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab,
+                            (int(rng.integers(2, 6)),)).astype(np.int32)
+        out.append((np.concatenate([prefix, tail]), 48, 0))
+    return out
+
+
 WORKLOADS = {"uniform": _requests_uniform, "mixed": _requests_mixed,
              "shared_prefix": _requests_shared_prefix,
-             "long_prompt": _requests_long_prompt}
-WORKLOAD_MAX_LEN = {"long_prompt": LONG_MAX_LEN}
+             "long_prompt": _requests_long_prompt,
+             "decode_heavy": _requests_decode_heavy}
+WORKLOAD_MAX_LEN = {"long_prompt": LONG_MAX_LEN,
+                    "decode_heavy": HEAVY_MAX_LEN}
+WORKLOAD_N_SLOTS = {"decode_heavy": HEAVY_N_SLOTS}
+
+
+def _decode_gathered_bytes(eng, cfg):
+    """Peak bytes of gathered K/V one decode step materializes, summed over
+    layers. The reference path rebuilds each slot's contiguous arena view
+    (n_blocks_per_slot * block_size positions); the fused XLA fallback
+    touches one block_size slab per scan step; the Pallas kernel indexes
+    the arena in place and gathers nothing."""
+    kv = 2 * eng.n_slots * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers
+    itemsize = np.dtype(eng.cache.dtype).itemsize
+    if eng.paged_impl is None:
+        return kv * eng.cache.eff_len * itemsize
+    if eng.paged_impl == "xla":
+        return kv * eng.cache.block_size * itemsize
+    return 0  # pallas: in-kernel indirection, no gathered copy
 
 
 def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
                  prefix_cache=True, block_size=8, prefill_chunk=None,
-                 max_len=None, passes=3):
+                 max_len=None, passes=3, use_paged_kernel=False):
     max_len = max_len or WORKLOAD_MAX_LEN.get(name, MAX_LEN)
+    n_slots = WORKLOAD_N_SLOTS.get(name, n_slots)
     if not prefix_cache:
         prefill_chunk = None  # chunking needs block mode; degrade, not crash
     rng = np.random.default_rng(0)
@@ -121,7 +165,8 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
                                    quant_cfg=qcfg,
                                    prefix_cache=prefix_cache,
                                    block_size=block_size,
-                                   prefill_chunk=prefill_chunk)
+                                   prefill_chunk=prefill_chunk,
+                                   use_paged_kernel=use_paged_kernel)
 
     def one_pass():
         pending = sorted(range(len(reqs)), key=lambda i: reqs[i][2])
@@ -182,8 +227,13 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
     rep = {"workload": name, "engine": "continuous", "packed": packed,
            "prefix_cache": eng.prefix_cache is not None,
            "prefill_chunk": eng.prefill_chunk,
+           "paged_impl": eng.paged_impl,
            "requests": len(reqs), "n_slots": n_slots,
            "gen_tokens": total_tokens, **best}
+    if eng.prefix_cache is not None:
+        rep["materializes_gathered_kv"] = eng.paged_impl is None
+        rep["decode_gathered_bytes_per_step"] = _decode_gathered_bytes(
+            eng, cfg)
     stats = eng.prefix_stats()
     prompt_tokens = sum(len(p) for p, _, _ in reqs)
     rep["prompt_tokens"] = prompt_tokens
@@ -290,6 +340,21 @@ def main():
             rep["p95_step_speedup"] = round(
                 rep_un["p95_step_s"] / rep["p95_step_s"], 2)
             print(json.dumps(rep_un))
+        elif name == "decode_heavy" and not args.no_prefix_cache:
+            # fused paged decode vs the gather reference on the same
+            # traffic: the fused report is the gated one, with the gather
+            # pass's latency and gathered-copy size alongside
+            rep = run_workload(name, cfg, params, use_paged_kernel=True,
+                               prefill_chunk=args.prefill_chunk, **common)
+            rep_g = run_workload(name, cfg, params, use_paged_kernel=False,
+                                 prefill_chunk=args.prefill_chunk, **common)
+            rep["p50_step_s_gather"] = rep_g["p50_step_s"]
+            rep["p95_step_s_gather"] = rep_g["p95_step_s"]
+            rep["decode_gathered_bytes_per_step_gather"] = \
+                rep_g["decode_gathered_bytes_per_step"]
+            rep["paged_p95_speedup"] = round(
+                rep_g["p95_step_s"] / rep["p95_step_s"], 2)
+            print(json.dumps(rep_g))
         else:
             rep = run_workload(name, cfg, params,
                                prefill_chunk=args.prefill_chunk, **common)

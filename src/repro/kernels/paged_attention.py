@@ -1,0 +1,234 @@
+"""Pallas TPU kernel: paged GQA decode attention over a block arena.
+
+Single-token decode against the serve engine's physical-block KV arena
+(``repro.serve.kv_cache.SlotKVCache`` block mode) *without* materializing
+the gathered K/V. The gather path (``models/attention.py``) re-builds an
+O(B * n_logical_blocks * block_size * Hkv * Dh) contiguous view of every
+slot's cache each step — exactly the copy paged attention exists to avoid.
+Here the grid iterates (slot, kv-head, logical block); each program reads
+``block_tables[slot, j]`` from SMEM (scalar prefetch, so the index is known
+before the body runs) and DMAs only that physical K/V block into VMEM. The
+softmax is accumulated online across the block axis (flash-decoding style):
+running max / denominator / weighted-V scratch persists across the
+innermost grid dimension and the output block is finalized on the last
+logical block.
+
+Masking contract (identical to the gather path):
+  * entries with ``pos < 0`` are invalid (unwritten / scrubbed / padding);
+  * logical blocks mapped to the reserved trash block 0 are invalid
+    wholesale, whatever garbage block 0's pos plane holds;
+  * causal: ``pos <= q_pos[slot]``; window: ``pos > q_pos[slot] - window``.
+
+Two implementations behind one wrapper, both bit-identical in masking and
+accumulation order:
+
+  * ``impl="pallas"`` — the kernel above (``interpret=True`` runs the body
+    in Python for CPU validation, same contract as ``swis_matmul_packed``);
+  * ``impl="xla"`` — a ``lax.scan`` over logical blocks gathering one
+    (B, block_size) K/V slab per step. Working set is O(B * block_size),
+    never O(B * n_blocks * block_size); this is the serving path on
+    backends without Pallas compile support.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu is importable on CPU builds; guard anyway for slim installs
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - exercised only on partial installs
+    pltpu = None
+
+
+def mask_value(dtype) -> float:
+    """Additive-mask fill for invalid attention scores: large-magnitude
+    negative but comfortably inside ``dtype``'s range, so downcasting the
+    scores (fp16/bf16/fp8 caches) never overflows to ``-inf`` (whose
+    ``exp`` is a well-defined 0 but whose arithmetic breeds NaNs the
+    moment two masked scores are subtracted)."""
+    return float(jnp.finfo(jnp.dtype(dtype)).min) / 2
+
+
+def _paged_decode_kernel(
+    tables_ref,  # (B, nb) int32, SMEM scalar prefetch
+    qpos_ref,  # (B,) int32, SMEM scalar prefetch
+    q_ref,  # (1, 1, G, Dh) this slot+kv-head's query group
+    k_ref,  # (1, bs, 1, Dh) the *physical* block tables[b, j] points at
+    v_ref,  # (1, bs, 1, Dh)
+    pos_ref,  # (1, bs) int32 position plane of that physical block
+    o_ref,  # (1, 1, G, Dh) output, revisited across the block axis
+    m_ref,  # (G, 1) f32 scratch: running max
+    l_ref,  # (G, 1) f32 scratch: running denominator
+    acc_ref,  # (G, Dh) f32 scratch: running weighted V
+    *,
+    nb: int,
+    causal: bool,
+    window: Optional[int],
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    neg = mask_value(jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, neg)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dh = q_ref.shape[-1]
+    q = q_ref[0, 0].astype(jnp.float32) * (dh ** -0.5)  # (G, Dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(  # (G, bs)
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    pos = pos_ref[0]  # (bs,)
+    qp = qpos_ref[b]
+    valid = pos >= 0
+    # logical blocks parked on the trash block are invalid by definition
+    valid &= tables_ref[b, j] != 0
+    if causal:
+        valid &= pos <= qp
+    if window is not None:
+        valid &= pos > qp - window
+    s = jnp.where(valid[None, :], s, neg)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # (G, bs)
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret"))
+def _paged_attention_pallas(q4, k_arena, v_arena, pos_arena, block_tables,
+                            q_pos, *, causal, window, interpret):
+    """q4: (B, Hkv, G, Dh) -> (B, Hkv, G, Dh) float32."""
+    b, hkv, g, dh = q4.shape
+    bs = k_arena.shape[1]
+    nb = block_tables.shape[1]
+    if pltpu is None:  # pragma: no cover
+        raise RuntimeError("pallas TPU frontend unavailable")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, h, j, t, qp: (bi, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda bi, h, j, t, qp: (t[bi, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda bi, h, j, t, qp: (t[bi, j], 0, h, 0)),
+            pl.BlockSpec((1, bs), lambda bi, h, j, t, qp: (t[bi, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, h, j, t, qp: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_decode_kernel, nb=nb, causal=causal,
+                               window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(q_pos, jnp.int32),
+      q4, k_arena, v_arena, pos_arena)
+
+
+def _paged_attention_xla(q4, k_arena, v_arena, pos_arena, block_tables,
+                         q_pos, *, causal, window):
+    """lax.scan over logical blocks: same masking and online-softmax
+    accumulation as the kernel, one (B, block_size) gathered slab per step
+    — the full gathered K/V is never materialized."""
+    b, hkv, g, dh = q4.shape
+    neg = mask_value(jnp.float32)
+    qh = q4.astype(jnp.float32) * (dh ** -0.5)  # (B, Hkv, G, Dh)
+
+    def step(carry, tcol):  # tcol: (B,) physical ids of logical block j
+        m, denom, acc = carry
+        kj = k_arena[tcol].astype(jnp.float32)  # (B, bs, Hkv, Dh)
+        vj = v_arena[tcol].astype(jnp.float32)
+        pj = jnp.where((tcol == 0)[:, None], -1, pos_arena[tcol])  # (B, bs)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qh, kj,
+                       preferred_element_type=jnp.float32)
+        valid = pj[:, None, None, :] >= 0
+        if causal:
+            valid &= pj[:, None, None, :] <= q_pos[:, None, None, None]
+        if window is not None:
+            valid &= pj[:, None, None, :] > (q_pos[:, None, None, None]
+                                             - window)
+        s = jnp.where(valid, s, neg)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom = denom * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgk,bkhd->bhgd", p, vj, preferred_element_type=jnp.float32)
+        return (m_new, denom, acc), None
+
+    m0 = jnp.full((b, hkv, g), neg, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, dh), jnp.float32)
+    (_, denom, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), jnp.asarray(block_tables, jnp.int32).T)
+    return acc / jnp.maximum(denom[..., None], 1e-30)
+
+
+def paged_attention_decode(
+    q: jnp.ndarray,  # (B, 1, H, Dh)
+    k_arena: jnp.ndarray,  # (n_blocks, block_size, Hkv, Dh)
+    v_arena: jnp.ndarray,
+    pos_arena: jnp.ndarray,  # (n_blocks, block_size) int32, -1 invalid
+    block_tables: jnp.ndarray,  # (B, nb) int32 physical ids, 0 = trash
+    q_pos: jnp.ndarray,  # (B,) int32 absolute decode positions
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """Single-token paged GQA decode: returns (B, 1, H, Dh) in ``q.dtype``.
+
+    ``impl``: ``"pallas"`` (compiled kernel, TPU), ``"pallas_interpret"``
+    (kernel body interpreted on CPU — validation only), or ``"xla"`` (the
+    scan fallback, the fused serving path on non-TPU backends). All three
+    share the masking contract and online-softmax math; parity against the
+    gather path is pinned by ``tests/test_paged_attention.py``.
+    """
+    b, s, h, dh = q.shape
+    assert s == 1, s
+    hkv = k_arena.shape[2]
+    g = h // hkv
+    # head index = hkv_idx * g + g_idx: the same (hkv, g) split the gather
+    # path's full_attention uses, so outputs line up head-for-head
+    q4 = q.reshape(b, hkv, g, dh)
+    if impl in ("pallas", "pallas_interpret"):
+        out = _paged_attention_pallas(
+            q4, k_arena, v_arena, pos_arena, block_tables, q_pos,
+            causal=causal, window=window,
+            interpret=(impl == "pallas_interpret"))
+    elif impl == "xla":
+        out = _paged_attention_xla(
+            q4, k_arena, v_arena, pos_arena, block_tables, q_pos,
+            causal=causal, window=window)
+    else:
+        raise ValueError(f"unknown paged attention impl {impl!r}")
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

@@ -12,10 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels.paged_attention import mask_value, paged_attention_decode
 from repro.models.layers import build_linear, dense, rope
 from repro.models.params import P
-
-NEG_INF = -1e30
 
 
 def build_attention(cfg: ArchConfig, kind: str = "self") -> dict:
@@ -93,7 +92,7 @@ def chunked_attention(
             valid = valid & (p_c[:, None, :] <= qp[:, :, None])
         if window is not None:
             valid = valid & (p_c[:, None, :] > qp[:, :, None] - window)
-        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        s = jnp.where(valid[:, None, None], s, mask_value(s.dtype))
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -107,7 +106,7 @@ def chunked_attention(
         acc_new = acc * alpha[..., None] + pv
         return (m_new, denom_new, acc_new), None
 
-    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), mask_value(jnp.float32), jnp.float32)
     l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
     a0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
     (m, denom, acc), _ = jax.lax.scan(
@@ -145,7 +144,7 @@ def full_attention(
         valid &= kp[:, None, :] <= qp[:, :, None]
     if window is not None:
         valid &= kp[:, None, :] > qp[:, :, None] - window
-    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    s = jnp.where(valid[:, None, None], s, mask_value(s.dtype))
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
@@ -166,6 +165,7 @@ def attention_apply(
     cache_index: Optional[jnp.ndarray] = None,  # scalar int32 write offset
     block_tables: Optional[jnp.ndarray] = None,  # (B, n_blocks) physical ids
     attend_cache: bool = False,  # prefill: attend over the (prefix) cache
+    paged: Optional[str] = None,  # fused paged decode kernel impl
 ):
     """Returns (out (B,S,D), new_cache_or_None).
 
@@ -173,11 +173,14 @@ def attention_apply(
     the cache leaves are a physical-block arena ((n_blocks, block_size,
     ...)) and row r's K/V is gathered through ``block_tables[r]`` — two
     rows pointing at the same physical block share that KV (prefix
-    caching). ``attend_cache`` makes a multi-token prefill attend over the
-    *updated cache* instead of just its own K/V, which is what lets a
-    prefill chunk see everything committed before it — a cached prompt
-    prefix, previously prefilled chunks, or both; the kv_pos >= 0 masking
-    contract is unchanged in both modes.
+    caching). ``paged`` selects the fused paged-attention decode instead of
+    materializing that gather (``"pallas"`` / ``"pallas_interpret"`` /
+    ``"xla"``, see :mod:`repro.kernels.paged_attention`); ``None`` keeps
+    the einsum-over-gather reference path. ``attend_cache`` makes a
+    multi-token prefill attend over the *updated cache* instead of just its
+    own K/V, which is what lets a prefill chunk see everything committed
+    before it — a cached prompt prefix, previously prefilled chunks, or
+    both; the kv_pos >= 0 masking contract is unchanged in all modes.
     """
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     b, s, _ = x.shape
@@ -230,16 +233,26 @@ def attention_apply(
             ck = cache["k"].at[phys, off].set(kd[:, 0])
             cv = cache["v"].at[phys, off].set(vd[:, 0])
             cp = cache["pos"].at[phys, off].set(new_pos[:, 0])
-            gk = ck[block_tables].reshape((b, nb * cache_len) + ck.shape[2:])
-            gv = cv[block_tables].reshape((b, nb * cache_len) + cv.shape[2:])
-            # logical blocks mapped to the trash block (id 0: unallocated
-            # table tails, free slots) are invalid by definition — their
-            # positions must never enter the mask, whatever garbage the
-            # free-slot dummy writes left in block 0's pos plane
-            gp = jnp.where((block_tables == 0)[:, :, None], -1,
-                           cp[block_tables]).reshape(b, nb * cache_len)
-            out = full_attention(q, gk, gv, q_pos=positions, kv_pos=gp,
-                                 causal=causal, window=window)
+            if paged is not None:
+                # fused path: the kernel indexes the arena through the
+                # table in place — the gathered K/V below never exists
+                out = paged_attention_decode(
+                    q, ck, cv, cp, block_tables, positions[:, 0],
+                    causal=causal, window=window, impl=paged)
+            else:
+                gk = ck[block_tables].reshape(
+                    (b, nb * cache_len) + ck.shape[2:])
+                gv = cv[block_tables].reshape(
+                    (b, nb * cache_len) + cv.shape[2:])
+                # logical blocks mapped to the trash block (id 0:
+                # unallocated table tails, free slots) are invalid by
+                # definition — their positions must never enter the mask,
+                # whatever garbage the free-slot dummy writes left in
+                # block 0's pos plane
+                gp = jnp.where((block_tables == 0)[:, :, None], -1,
+                               cp[block_tables]).reshape(b, nb * cache_len)
+                out = full_attention(q, gk, gv, q_pos=positions, kv_pos=gp,
+                                     causal=causal, window=window)
             y = dense(p["wo"], out.reshape(b, s, h * dh), cfg)
             return y, {"k": ck, "v": cv, "pos": cp}
         if jnp.ndim(idx) == 1:

@@ -81,7 +81,8 @@ class Model:
     # ------------------------------------------------------------------
 
     def _unit_apply(self, unit_params, x, *, positions, ctx, cache,
-                    cache_index, block_tables=None, attend_cache=False):
+                    cache_index, block_tables=None, attend_cache=False,
+                    paged=None):
         new_cache = {} if cache is not None else None
         aux_sum = jnp.zeros((), jnp.float32)
         for i, kind in enumerate(self.unit):
@@ -91,7 +92,8 @@ class Model:
             x, nc, aux = tfm.block_apply(
                 unit_params[key], x, self.cfg, kind, positions=positions,
                 ctx=ctx, cache=c, cache_index=cache_index,
-                block_tables=block_tables, attend_cache=attend_cache)
+                block_tables=block_tables, attend_cache=attend_cache,
+                paged=paged)
             if cache is not None:
                 new_cache[key] = nc if nc is not None else {}
             if "moe_aux" in aux:
@@ -100,14 +102,15 @@ class Model:
 
     def _stack_apply(self, params, x, *, positions, ctx=None, cache=None,
                      cache_index=None, block_tables=None,
-                     attend_cache=False):
+                     attend_cache=False, paged=None):
         cfg = self.cfg
 
         def unit_fn(x, unit_params, unit_cache):
             return self._unit_apply(
                 unit_params, x, positions=positions, ctx=ctx,
                 cache=unit_cache, cache_index=cache_index,
-                block_tables=block_tables, attend_cache=attend_cache)
+                block_tables=block_tables, attend_cache=attend_cache,
+                paged=paged)
 
         if cfg.parallel.remat == "full":
             unit_fn = jax.checkpoint(unit_fn)
@@ -162,7 +165,8 @@ class Model:
                 x, nc, aux = tfm.block_apply(
                     params["tail"][key], x, cfg, kind, positions=positions,
                     ctx=ctx, cache=c, cache_index=cache_index,
-                    block_tables=block_tables, attend_cache=attend_cache)
+                    block_tables=block_tables, attend_cache=attend_cache,
+                    paged=paged)
                 aux_total = aux_total + aux.get("moe_aux", 0.0)
                 if cache is not None:
                     new_cache["tail"][key] = nc if nc is not None else {}
@@ -170,7 +174,7 @@ class Model:
 
     def apply(self, params, batch: Dict[str, jnp.ndarray], *, cache=None,
               cache_index=None, last_only: bool = False, last_index=None,
-              block_tables=None, attend_cache: bool = False):
+              block_tables=None, attend_cache: bool = False, paged=None):
         """Forward pass. batch: tokens (B,S) [or frames], optional patches.
 
         Returns (logits (B,S,V) — or (B,1,V) when last_only — new_cache,
@@ -204,7 +208,7 @@ class Model:
         x, new_cache, aux = self._stack_apply(
             params, x, positions=positions, ctx=ctx, cache=cache,
             cache_index=cache_index, block_tables=block_tables,
-            attend_cache=attend_cache)
+            attend_cache=attend_cache, paged=paged)
         if last_index is not None:
             b = x.shape[0]
             idx = jnp.broadcast_to(jnp.asarray(last_index, jnp.int32), (b,))
@@ -273,15 +277,19 @@ class Model:
             last_index=last_index, attend_cache=True)
         return logits[:, -1], cache
 
-    def decode_step(self, params, token, cache, index, block_tables=None):
+    def decode_step(self, params, token, cache, index, block_tables=None,
+                    *, paged=None):
         """One decode step. token: (B, 1) int32; index: tokens-so-far — a
         scalar (lockstep batch) or a (B,) vector of per-slot positions
         (continuous batching over a per-slot cache). ``block_tables``
         ((B, n_blocks) int32) switches the cache to block-table
-        indirection over a physical-block arena (prefix caching)."""
+        indirection over a physical-block arena (prefix caching);
+        ``paged`` additionally fuses the block-table gather into the
+        paged-attention decode kernel (impl name, see
+        :mod:`repro.kernels.paged_attention`)."""
         logits, cache, _ = self.apply(params, {"tokens": token}, cache=cache,
                                       cache_index=index,
-                                      block_tables=block_tables)
+                                      block_tables=block_tables, paged=paged)
         return logits[:, -1], cache
 
     # ------------------------------------------------------------------

@@ -122,6 +122,7 @@ def block_apply(
     cache_index: Optional[jnp.ndarray] = None,
     block_tables: Optional[jnp.ndarray] = None,
     attend_cache: bool = False,
+    paged: Optional[str] = None,
 ):
     """Returns (x, new_cache, aux)."""
     aux = {}
@@ -155,6 +156,7 @@ def block_apply(
         cache_index=cache_index,
         block_tables=block_tables,
         attend_cache=attend_cache,
+        paged=paged,
     )
     x = x + h
 

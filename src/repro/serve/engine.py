@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -111,6 +112,13 @@ class ContinuousBatchingEngine:
     unchunked prefill. ``prefill_backlog`` caps how many chunk-prefill
     groups may be in flight before admission pauses (in-flight chunk work
     the admission gate accounts for).
+
+    With ``use_paged_kernel=True`` (block mode only) the decode step runs
+    the fused paged-attention kernel: attention reads each slot's K/V
+    through its block table *in place* instead of materializing the
+    gathered arena view every step (``paged_impl`` overrides the backend
+    auto-pick — ``"pallas"`` on TPU, ``"xla"`` scan fallback elsewhere).
+    Token-exact vs the gather path; see ``docs/serving.md``.
     """
 
     def __init__(self, cfg: ArchConfig, params: Any, max_len: int = 256,
@@ -121,7 +129,9 @@ class ContinuousBatchingEngine:
                  n_cache_blocks: Optional[int] = None,
                  bucket_prompts: bool = True,
                  prefill_chunk: Optional[int] = None,
-                 prefill_backlog: int = 2):
+                 prefill_backlog: int = 2,
+                 use_paged_kernel: bool = False,
+                 paged_impl: Optional[str] = None):
         self.cfg, self.params, self.pack_stats = _maybe_pack(
             cfg, params, packed, quant_cfg)
         self.max_len = max_len
@@ -162,9 +172,26 @@ class ContinuousBatchingEngine:
         self.prefill_chunk = prefill_chunk
         self.prefill_backlog = max(1, prefill_backlog)
         self._prefill_groups: collections.deque = collections.deque()
+        # fused paged-attention decode: indexes the KV arena through the
+        # block tables *inside* the attention kernel, so the per-step
+        # gathered K/V copy of the reference path is never materialized.
+        # "pallas" is the TPU kernel; "xla" is the scan fallback with the
+        # same masking/accumulation contract for backends without Pallas
+        # compile support; "pallas_interpret" exists for validation.
+        if use_paged_kernel and self.prefix_cache is None:
+            raise ValueError(
+                "use_paged_kernel requires the block-mode prefix cache "
+                "(uniform attention caches with prefix_cache=True)")
+        if use_paged_kernel:
+            self.paged_impl = paged_impl or (
+                "pallas" if jax.default_backend() == "tpu" else "xla")
+        else:
+            self.paged_impl = None
         self._prefill_flat = jax.jit(self.model.prefill_bucketed)
         self._prefill_sfx = jax.jit(self.model.prefill_chunk)
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+        self._decode = jax.jit(
+            functools.partial(self.model.decode_step, paged=self.paged_impl),
+            donate_argnums=(2,))
         self._dummy_key = jax.random.key(0)
         self._stat_prefill_tokens = 0
         self._stat_saved_tokens = 0

@@ -161,6 +161,12 @@ class SlotKVCache:
         of the row falls back to the trash block 0."""
         row = np.zeros(self.blocks_per_slot, np.int32)
         row[:len(blocks)] = blocks
+        # the trash-block convention decode masking relies on: physical
+        # block 0 is reserved (BlockPool pins it off the free list) and
+        # must never back live storage — a table entry of 0 *means*
+        # "invalid", so a live block numbered 0 would be silently masked
+        assert not np.any(row[:len(blocks)] == 0), \
+            f"live table entry maps to reserved trash block 0: {blocks}"
         self.block_tables[slot] = row
         self._tables_dev = None
 
@@ -208,26 +214,43 @@ class SlotKVCache:
         prefix, or the chunks committed so far). ``length`` lets chunked
         prefill attend over just committed + chunk instead of the full
         slot capacity. prefix_len == 0 returns the memoized fresh tree
-        directly (safe: prefill does not donate its cache)."""
+        directly (safe: prefill does not donate its cache). The gather
+        runs as ONE jit'd ``take``-based call over the whole tree (keyed
+        on (g, prefix blocks, length) — all bucketed), not an eager
+        per-leaf/per-block loop: one dispatch per admission."""
         g = len(block_ids)
         base = self.fresh(g, length)
         if prefix_len == 0:
             return base
-        ids = jnp.asarray(np.asarray(block_ids, np.int32).reshape(-1))
+        ids = np.asarray(block_ids, np.int32)
+        assert ids.size * self.block_size == g * prefix_len, \
+            (ids.shape, prefix_len)
+        assert not np.any(ids == 0), \
+            f"cached prefix references reserved trash block 0: {block_ids}"
+        return self._gather_prefix(base, self.tree, jnp.asarray(ids))
 
-        def graft(dst, src, axis):
-            if axis == 0:  # (n_blocks, bs, ...) -> rows (g, prefix, ...)
-                pref = src[ids].reshape((g, prefix_len) + src.shape[2:])
-                return dst.at[:, :prefix_len].set(pref)
-            # (layers, n_blocks, bs, ...) -> (layers, g, prefix, ...)
-            pref = src[:, ids].reshape(
-                (src.shape[0], g, prefix_len) + src.shape[3:])
-            return dst.at[:, :, :prefix_len].set(pref)
+    @functools.cached_property
+    def _gather_prefix(self):
+        def gather(base, arena, ids2d):
+            g, nbp = ids2d.shape
+            plen = nbp * self.block_size
+            ids = ids2d.reshape(-1)
 
-        return {key: jax.tree.map(
-                    lambda d, s, ax=_SLOT_AXIS[key]: graft(d, s, ax),
-                    base[key], self.tree[key])
-                for key, sub in self.tree.items()}
+            def graft(dst, src, axis):
+                if axis == 0:  # (n_blocks, bs, ...) -> rows (g, pref, ...)
+                    pref = jnp.take(src, ids, axis=0).reshape(
+                        (g, plen) + src.shape[2:])
+                    return dst.at[:, :plen].set(pref)
+                # (layers, n_blocks, bs, ...) -> (layers, g, pref, ...)
+                pref = jnp.take(src, ids, axis=1).reshape(
+                    (src.shape[0], g, plen) + src.shape[3:])
+                return dst.at[:, :, :plen].set(pref)
+
+            return {key: jax.tree.map(
+                        lambda d, s, ax=_SLOT_AXIS[key]: graft(d, s, ax),
+                        base[key], arena[key])
+                    for key in arena}
+        return jax.jit(gather)
 
     def scatter_row(self, slot_tree, row: int, block_ids: Sequence[int],
                     first_block: int, n_valid: int) -> None:
@@ -242,9 +265,11 @@ class SlotKVCache:
         costs one in-place arena write, not an eager whole-arena copy."""
         if not len(block_ids):
             return
+        ids = np.asarray(block_ids, np.int32)
+        assert not np.any(ids == 0), \
+            f"commit targets reserved trash block 0: {block_ids}"
         self.tree = self._scatter(
-            self.tree, slot_tree,
-            jnp.asarray(np.asarray(block_ids, np.int32)),
+            self.tree, slot_tree, jnp.asarray(ids),
             jnp.int32(row), jnp.int32(first_block * self.block_size),
             jnp.int32(n_valid))
 

@@ -45,6 +45,11 @@ class BlockPool:
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.refcount = np.zeros(n_blocks, np.int64)
+        # Block 0 is the reserved trash block: free-slot dummy decode
+        # writes land there and block-table entry 0 means "invalid" to
+        # the paged decode kernel. Pin its refcount so free([0]) raises
+        # and it can never re-enter circulation as live storage.
+        self.refcount[0] = 1
         # LIFO free list; block 0 reserved as the trash block
         self._free: List[int] = list(range(n_blocks - 1, 0, -1))
 

@@ -1,3 +1,4 @@
+import jax
 import numpy as np
 import pytest
 
@@ -5,3 +6,21 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def interpret_modes():
+    """Parametrize Pallas kernel tests over interpret=True/False.
+
+    interpret=True runs everywhere (pure-Python emulation). compiled mode
+    (interpret=False) needs a backend with Pallas lowering support, so it
+    is skipped gracefully on CPU CI and exercised on TPU runners.
+    """
+    compiled = pytest.param(
+        False,
+        id="compiled",
+        marks=pytest.mark.skipif(
+            jax.default_backend() not in ("tpu", "gpu"),
+            reason="Pallas compile requires a TPU/GPU backend",
+        ),
+    )
+    return [pytest.param(True, id="interpret"), compiled]

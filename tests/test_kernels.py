@@ -7,6 +7,7 @@ import pytest
 
 from repro.core import packing, swis
 from repro.kernels import ops, ref
+from conftest import interpret_modes
 
 SWEEP = [
     # (M, K, N, group, n_shifts, dtype)
@@ -26,14 +27,17 @@ def _make(rng, k, n, group, n_shifts):
     return qw, packing.pack(qw)
 
 
+@pytest.mark.parametrize("interpret", interpret_modes())
 @pytest.mark.parametrize("m,k,n,group,n_shifts,dtype", SWEEP)
-def test_pallas_matches_oracle(rng, m, k, n, group, n_shifts, dtype):
+def test_pallas_matches_oracle(rng, m, k, n, group, n_shifts, dtype,
+                               interpret):
     qw, pw = _make(rng, k, n, group, n_shifts)
     x = jnp.asarray(rng.normal(0, 1, (m, k)), dtype)
     want = np.asarray(ref.swis_matmul_ref(
         x, pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale,
         group=group), np.float32)
-    got = np.asarray(ops.swis_matmul(x, pw, use_pallas=True, interpret=True))
+    got = np.asarray(ops.swis_matmul(x, pw, use_pallas=True,
+                                     interpret=interpret))
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
 
@@ -52,8 +56,9 @@ def test_oracle_matches_fake_quant(rng, m, k, n, group, n_shifts, dtype):
                                atol=1e-5 * np.abs(want).max())
 
 
+@pytest.mark.parametrize("interpret", interpret_modes())
 @pytest.mark.parametrize("n_shifts", [2, 3, 4])
-def test_swis_c_offset_packed(rng, n_shifts):
+def test_swis_c_offset_packed(rng, n_shifts, interpret):
     # SWIS-C stores one offset byte per group (paper §2.2 compression edge)
     w = rng.normal(0, 0.05, (256, 128)).astype(np.float32)
     qw = swis.quantize(jnp.asarray(w),
@@ -65,7 +70,7 @@ def test_swis_c_offset_packed(rng, n_shifts):
     want = np.asarray(x @ qw.qweights)
     for use_pallas in (False, True):
         got = np.asarray(ops.swis_matmul(x, pw, use_pallas=use_pallas,
-                                         interpret=True))
+                                         interpret=interpret))
         np.testing.assert_allclose(got, want, rtol=1e-5,
                                    atol=1e-5 * np.abs(want).max())
 
@@ -101,10 +106,12 @@ def test_tile_shape_validation(rng):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("interpret", interpret_modes())
 @pytest.mark.parametrize("consecutive", [False, True])
 @pytest.mark.parametrize("n_shifts", [1, 2, 3])
 @pytest.mark.parametrize("bm,bn,bk", [(8, 128, 64), (16, 128, 32)])
-def test_packed_kernel_param_sweep(rng, consecutive, n_shifts, bm, bn, bk):
+def test_packed_kernel_param_sweep(rng, consecutive, n_shifts, bm, bn, bk,
+                                   interpret):
     m, k, n, group = 16, 128, 128, 4
     method = "swis_c" if consecutive else "swis"
     w = rng.normal(0, 0.05, (k, n)).astype(np.float32)
@@ -122,7 +129,7 @@ def test_packed_kernel_param_sweep(rng, consecutive, n_shifts, bm, bn, bk):
     got = np.asarray(swis_matmul_packed(
         x, pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale,
         n_shifts=n_shifts, group=group, bm=bm, bn=bn, bk=bk,
-        interpret=True, consecutive=consecutive))
+        interpret=interpret, consecutive=consecutive))
     np.testing.assert_allclose(got, want, rtol=1e-5,
                                atol=1e-5 * max(np.abs(want).max(), 1.0))
 

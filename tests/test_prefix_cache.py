@@ -50,6 +50,20 @@ def test_match_is_committed_prefix(rng):
     assert trie.match(_toks(rng, 4 * BS)) == []
 
 
+def test_block0_reserved():
+    """Block 0 is the trash block: never allocated, refcount pinned, and
+    free([0]) must raise — table entry 0 means "invalid" to the paged
+    decode kernel, so it can never re-enter circulation as live storage."""
+    pool = BlockPool(8, BS)
+    assert pool.refcount[0] == 1
+    assert pool.n_free() == 7
+    ids = pool.alloc(7)  # drain the pool completely
+    assert ids is not None and 0 not in ids
+    assert pool.alloc(1) is None
+    with pytest.raises(RuntimeError, match="referenced"):
+        pool.free([0])
+
+
 def test_refcounts_never_negative(rng):
     pool = BlockPool(8, BS)
     ids = pool.alloc(2)
@@ -210,6 +224,50 @@ def test_repeat_prompt_skips_prefill_compute(rng):
     # 2 full blocks cached -> only len(p) - 2*BS suffix tokens computed
     assert stats["prefill_tokens"] - t0 == len(p) - 2 * BS
     assert stats["saved_tokens"] == 2 * BS
+
+
+def test_unadmit_under_pool_pressure_leaks_no_refcounts(rng):
+    """Regression: a failed admission increfs the matched prefix chain and
+    must roll it back (``scheduler.unadmit`` + ``prefix_cache.release``) —
+    a leak here strands arena blocks with phantom references forever.
+    Starve the pool with an external pin, watch admissions fail and
+    requeue, then unpin, drain, and check every non-reserved block is
+    either free or committed with refcount zero."""
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
+                                   prefix_cache=True, block_size=BS,
+                                   prefill_chunk=BS)
+    pool = eng.prefix_cache.pool
+    base = rng.integers(0, cfg.vocab, (2 * BS + 3,)).astype(np.int32)
+    first = eng.submit(base, 5, seed=0)
+    assert first in eng.drain()  # commits base's full blocks into the trie
+    matched_blocks = eng.prefix_cache.match(base)
+    assert len(matched_blocks) == 2
+
+    pinned = pool.alloc(pool.n_free())  # external pin: pool is starved
+    pool.incref(pinned)
+    prompts = [np.concatenate([base, rng.integers(0, cfg.vocab, (10 + i,))
+                               .astype(np.int32)]) for i in range(2)]
+    rids = [eng.submit(p, 6, seed=1 + i) for i, p in enumerate(prompts)]
+    for _ in range(3):
+        eng.step()
+    # both admissions failed mid-PREFILLING and went back to the queue,
+    # and the matched blocks' speculative references were rolled back
+    assert len(eng.scheduler.queue) == 2
+    for b in matched_blocks:
+        assert pool.refcount[b] == 0
+
+    pool.decref(pinned)
+    pool.free(pinned)
+    out = eng.drain()
+    assert sorted(out) == sorted(set(out) | set(rids))
+    assert pool.refcount[0] == 1  # trash block stays pinned
+    np.testing.assert_array_equal(pool.refcount[1:], 0)
+    committed = {b for b in range(1, pool.n_blocks)
+                 if eng.prefix_cache.is_committed(b)}
+    free = set(pool._free)
+    assert free.isdisjoint(committed)
+    assert free | committed == set(range(1, pool.n_blocks))
 
 
 def test_fresh_memo_is_bounded(rng):
