@@ -21,13 +21,81 @@ actually present in the run —
 Workloads absent from the report are skipped, so the script composes with
 any ``--workloads`` selection. Exits non-zero with a reason on failure.
 
+``--require-metrics DIR`` additionally validates the observability
+artifacts ``serve_bench.py --artifacts-dir`` exported: for every workload
+in the report there must be a ``metrics_<workload>.json`` snapshot with
+the unified ``engine.metrics()`` sections and required keys, and a
+non-empty ``trace_<workload>.jsonl`` lifecycle trace. Failures name the
+workload and the missing key/file (actionable, not a bare assert).
+
 Usage: python benchmarks/check_bench.py BENCH_serve.json [--min-speedup 2]
+           [--require-metrics artifacts/]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+# engine.metrics() contract the artifacts must satisfy (see
+# docs/serving.md "Observability" for the full name/units table)
+REQUIRED_SECTIONS = ("engine", "scheduler", "prefix_cache", "trace")
+REQUIRED_PHASES = ("step.total_s",)
+REQUIRED_SCHEDULER_KEYS = ("queue_depth", "active_slots",
+                           "prefilling_slots", "decoding_slots",
+                           "submitted", "finished")
+REQUIRED_PREFIX_KEYS = ("enabled", "prefill_tokens", "saved_tokens")
+REQUIRED_POOL_KEYS = ("n_blocks", "free_blocks", "used_blocks",
+                      "occupancy")
+
+
+def check_metrics(results, metrics_dir):
+    """Validate the per-workload observability artifacts. Returns a list
+    of error strings, each naming the workload and the offending
+    key/file so the failure is actionable from the CI log alone."""
+    errors = []
+    for name in sorted(results):
+        mpath = os.path.join(metrics_dir, f"metrics_{name}.json")
+        if not os.path.exists(mpath):
+            errors.append(f"{name}: metrics snapshot missing ({mpath}) — "
+                          f"was serve_bench run with --artifacts-dir?")
+            continue
+        with open(mpath) as f:
+            snap = json.load(f)
+        for sec in REQUIRED_SECTIONS:
+            if sec not in snap:
+                errors.append(f"{name}: snapshot section {sec!r} missing "
+                              f"from {mpath}")
+        phases = snap.get("engine", {}).get("phases", {})
+        for ph in REQUIRED_PHASES:
+            if ph not in phases:
+                errors.append(f"{name}: phase histogram {ph!r} missing "
+                              f"from engine.phases in {mpath}")
+            elif not phases[ph].get("count", 0) > 0:
+                errors.append(f"{name}: phase histogram {ph!r} recorded "
+                              f"zero observations in {mpath}")
+        for key in REQUIRED_SCHEDULER_KEYS:
+            if key not in snap.get("scheduler", {}):
+                errors.append(f"{name}: scheduler gauge {key!r} missing "
+                              f"from {mpath}")
+        for key in REQUIRED_PREFIX_KEYS:
+            if key not in snap.get("prefix_cache", {}):
+                errors.append(f"{name}: prefix_cache key {key!r} missing "
+                              f"from {mpath}")
+        if snap.get("prefix_cache", {}).get("enabled"):
+            for key in REQUIRED_POOL_KEYS:
+                if key not in snap.get("block_pool", {}):
+                    errors.append(f"{name}: block_pool gauge {key!r} "
+                                  f"missing from {mpath}")
+        tpath = os.path.join(metrics_dir, f"trace_{name}.jsonl")
+        if not os.path.exists(tpath):
+            errors.append(f"{name}: lifecycle trace missing ({tpath})")
+        elif os.path.getsize(tpath) == 0:
+            errors.append(f"{name}: lifecycle trace is empty ({tpath}) — "
+                          f"was the engine built with enable_metrics="
+                          f"False?")
+    return errors
 
 
 def check(results, min_speedup, min_paged_speedup=1.0,
@@ -92,16 +160,24 @@ def main():
     ap.add_argument("--allow-missing-speedup", action="store_true",
                     help="skip (rather than fail) speedup assertions when "
                          "the comparison fields are absent from the report")
+    ap.add_argument("--require-metrics", default=None, metavar="DIR",
+                    help="validate the observability artifacts "
+                         "(metrics_<workload>.json + trace_<workload>"
+                         ".jsonl) serve_bench exported into DIR")
     args = ap.parse_args()
     with open(args.report) as f:
         results = json.load(f)
     errors = check(results, args.min_speedup, args.min_paged_speedup,
                    args.allow_missing_speedup)
+    if args.require_metrics:
+        errors += check_metrics(results, args.require_metrics)
     for e in errors:
         print(f"BENCH CHECK FAILED: {e}", file=sys.stderr)
     if errors:
         sys.exit(1)
-    print(f"bench checks passed for {sorted(results)}")
+    print(f"bench checks passed for {sorted(results)}"
+          + (f" (+ metrics artifacts in {args.require_metrics})"
+             if args.require_metrics else ""))
 
 
 if __name__ == "__main__":

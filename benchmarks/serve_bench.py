@@ -32,17 +32,28 @@ Prints one JSON line per (workload, engine-config) with wall seconds,
 generated tokens/sec, p50/p95 per-step wall time, and time-to-first-token
 percentiles (plus prefix_stats fields when the cache is on).
 
+Per-step percentiles come from the engine's own ``step.total_s`` phase
+histogram and TTFT / TPOT from the request-lifecycle trace
+(``engine.tracer.summary()``) — the bench no longer keeps hand-rolled
+``perf_counter`` bookkeeping, so its numbers are definitionally the same
+ones ``engine.metrics()`` reports in production.
+
 ``--json-out`` additionally writes one JSON object per workload (a dict
 keyed by workload name) — the CI perf trajectory artifact. With
 ``--check-baseline`` the run exits non-zero if tokens/sec or p95 step
 latency regresses more than ``--baseline-tolerance`` (default 25%) vs the
 committed baseline; ``--update-baseline`` rewrites that baseline from the
-current run.
+current run. ``--artifacts-dir DIR`` exports, per workload variant, the
+last measured pass's trace (``trace_<tag>.jsonl``) and full
+``engine.metrics()`` snapshot (``metrics_<tag>.json``) — the CI bench job
+uploads these, and ``check_bench.py --require-metrics DIR`` validates
+them.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -151,7 +162,8 @@ def _decode_gathered_bytes(eng, cfg):
 
 def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
                  prefix_cache=True, block_size=8, prefill_chunk=None,
-                 max_len=None, passes=3, use_paged_kernel=False):
+                 max_len=None, passes=3, use_paged_kernel=False,
+                 artifacts_dir=None, artifact_tag=None):
     max_len = max_len or WORKLOAD_MAX_LEN.get(name, MAX_LEN)
     n_slots = WORKLOAD_N_SLOTS.get(name, n_slots)
     if not prefix_cache:
@@ -169,61 +181,63 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
                                    use_paged_kernel=use_paged_kernel)
 
     def one_pass():
+        """Drive the traffic; all timing observability comes from the
+        engine's metrics/trace layer, not bench-side bookkeeping."""
         pending = sorted(range(len(reqs)), key=lambda i: reqs[i][2])
         t0 = time.perf_counter()
-        submit_t = {}
-        first_t = {}
-        step_times = []
         step = 0
         done = 0
         while done < len(reqs):
             while pending and reqs[pending[0]][2] <= step:
                 i = pending.pop(0)
-                rid = eng.submit(reqs[i][0], reqs[i][1])
-                submit_t[rid] = time.perf_counter()
-            t1 = time.perf_counter()
-            finished = eng.step()
-            t2 = time.perf_counter()
-            step_times.append(t2 - t1)
-            # first-token observation: live slots that have sampled, plus
-            # requests that finished within this very step
-            for st in eng.scheduler.slots:
-                if st is not None and st.n_gen >= 1:
-                    first_t.setdefault(st.req.rid, t2)
-            for f in finished:
-                first_t.setdefault(f.rid, t2)
-            done += len(finished)
+                eng.submit(reqs[i][0], reqs[i][1])
+            done += len(eng.step())
             step += 1
-        wall = time.perf_counter() - t0
-        ttft = [first_t[r] - submit_t[r] for r in submit_t]
-        return wall, step_times, ttft
+        return time.perf_counter() - t0
+
+    def pass_report(dt):
+        hist = eng.metrics_registry.histogram("step.total_s")
+        hs = hist.summary()
+        ts = eng.tracer.summary()
+        return {"wall_s": round(dt, 3),
+                "tok_per_s": round(total_tokens / dt, 1),
+                "steps": hs["count"],
+                "p50_step_s": round(hs["p50"], 5),
+                "p95_step_s": round(hs["p95"], 5),
+                "max_step_s": round(hs["max"], 5),
+                "ttft_p50_s": round(ts["ttft_s"]["p50"], 5),
+                "ttft_p95_s": round(ts["ttft_s"]["p95"], 5),
+                "tpot_p50_s": round(ts["tpot_s"]["p50"], 6),
+                "queue_wait_p95_s": round(ts["queue_wait_s"]["p95"], 5)}
 
     # warmup pass compiles every prefill/decode shape; reset() keeps the
-    # jit caches, so the measured passes are steady-state serving. Each
-    # metric takes its best pass — host scheduling noise (GC, interrupts)
-    # only ever worsens a pass, while a real regression shifts them all.
+    # jit caches (and clears metrics + trace), so the measured passes are
+    # steady-state serving with clean counters. Each metric takes its
+    # best pass — host scheduling noise (GC, interrupts) only ever
+    # worsens a pass, while a real regression shifts them all.
     one_pass()
     best = None
     for _ in range(passes):
         eng.reset()
-        dt, step_times, ttft = one_pass()
-        steps = np.asarray(step_times)
-        ttft = np.asarray(ttft)
-        cur = {"wall_s": round(dt, 3),
-               "tok_per_s": round(total_tokens / dt, 1),
-               "steps": len(step_times),
-               "p50_step_s": round(float(np.percentile(steps, 50)), 5),
-               "p95_step_s": round(float(np.percentile(steps, 95)), 5),
-               "max_step_s": round(float(steps.max()), 5),
-               "ttft_p50_s": round(float(np.percentile(ttft, 50)), 5),
-               "ttft_p95_s": round(float(np.percentile(ttft, 95)), 5)}
+        cur = pass_report(one_pass())
         if best is None:
             best = cur
         else:
             best["tok_per_s"] = max(best["tok_per_s"], cur["tok_per_s"])
             for k in ("wall_s", "p50_step_s", "p95_step_s", "max_step_s",
-                      "ttft_p50_s", "ttft_p95_s"):
+                      "ttft_p50_s", "ttft_p95_s", "tpot_p50_s",
+                      "queue_wait_p95_s"):
                 best[k] = min(best[k], cur[k])
+    if artifacts_dir:
+        # last measured pass's lifecycle trace + unified metrics snapshot
+        tag = artifact_tag or name
+        os.makedirs(artifacts_dir, exist_ok=True)
+        eng.tracer.export_jsonl(
+            os.path.join(artifacts_dir, f"trace_{tag}.jsonl"))
+        with open(os.path.join(artifacts_dir,
+                               f"metrics_{tag}.json"), "w") as f:
+            json.dump(eng.metrics(), f, indent=2, sort_keys=True)
+            f.write("\n")
     rep = {"workload": name, "engine": "continuous", "packed": packed,
            "prefix_cache": eng.prefix_cache is not None,
            "prefill_chunk": eng.prefill_chunk,
@@ -303,6 +317,9 @@ def main():
                          f"{LONG_PREFILL_CHUNK})")
     ap.add_argument("--json-out", default=None,
                     help="write one JSON object per workload to this file")
+    ap.add_argument("--artifacts-dir", default=None, metavar="DIR",
+                    help="export per-workload trace JSONL + engine.metrics()"
+                         " snapshots (CI observability artifacts)")
     ap.add_argument("--check-baseline", default=None, metavar="PATH",
                     help="fail if tok/s or p95 step latency regresses vs "
                          "this baseline JSON")
@@ -327,7 +344,8 @@ def main():
     common = dict(n_slots=args.n_slots, requests=args.requests,
                   packed=args.packed, qcfg=qcfg,
                   prefix_cache=not args.no_prefix_cache,
-                  block_size=args.block_size, passes=args.passes)
+                  block_size=args.block_size, passes=args.passes,
+                  artifacts_dir=args.artifacts_dir)
     results = {}
     for name in names:
         if name == "long_prompt" and not args.no_prefix_cache:
@@ -335,6 +353,7 @@ def main():
             rep = run_workload(name, cfg, params, prefill_chunk=chunk,
                                **common)
             rep_un = run_workload(name, cfg, params, prefill_chunk=None,
+                                  artifact_tag=f"{name}_unchunked",
                                   **common)
             rep["p95_step_s_unchunked"] = rep_un["p95_step_s"]
             rep["p95_step_speedup"] = round(
@@ -347,7 +366,8 @@ def main():
             rep = run_workload(name, cfg, params, use_paged_kernel=True,
                                prefill_chunk=args.prefill_chunk, **common)
             rep_g = run_workload(name, cfg, params, use_paged_kernel=False,
-                                 prefill_chunk=args.prefill_chunk, **common)
+                                 prefill_chunk=args.prefill_chunk,
+                                 artifact_tag=f"{name}_gather", **common)
             rep["p50_step_s_gather"] = rep_g["p50_step_s"]
             rep["p95_step_s_gather"] = rep_g["p95_step_s"]
             rep["decode_gathered_bytes_per_step_gather"] = \

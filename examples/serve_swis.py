@@ -15,6 +15,7 @@ from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
 from repro.serve import ContinuousBatchingEngine, DecodeEngine
+from repro.serve.metrics import format_report
 
 
 def main():
@@ -71,6 +72,29 @@ def main():
           f"generated; {legacy_ok}/{len(rids)} match the static-batch "
           f"engine token-for-token")
     print("sample:", results[rids[0]].tolist())
+
+    # the observability layer every serve-path change is judged against:
+    # one unified snapshot — cache health, arena occupancy, scheduler
+    # counters, per-phase step latency (docs/serving.md "Observability")
+    m = eng.metrics()
+    if "block_pool" in m:
+        print(f"prefix cache: hit_rate="
+              f"{m['prefix_cache']['hit_rate']:.2f} "
+              f"saved_tokens={m['prefix_cache']['saved_tokens']} "
+              f"pool_occupancy={m['block_pool']['occupancy']:.2f} "
+              f"({m['block_pool']['used_blocks']}/"
+              f"{m['block_pool']['usable_blocks']} blocks)")
+    print(f"scheduler: finished={m['scheduler']['finished']} "
+          f"admitted={m['scheduler']['admitted']} "
+          f"unadmitted={m['scheduler']['unadmitted']}")
+    print(format_report(eng.metrics_registry.snapshot(),
+                        title="step-phase timing"))
+    tsum = eng.tracer.summary()
+    if tsum["ttft_s"]:
+        print(f"ttft: p50={tsum['ttft_s']['p50'] * 1e3:.1f}ms "
+              f"p95={tsum['ttft_s']['p95'] * 1e3:.1f}ms  "
+              f"tpot: p50={tsum['tpot_s']['p50'] * 1e3:.2f}ms "
+              f"(from {tsum['events']} trace events)")
 
 
 if __name__ == "__main__":

@@ -6,11 +6,18 @@ weights (see docs/serving.md for the engine architecture).
 
 ``--engine static`` runs the legacy lockstep DecodeEngine instead (equal
 prompt lengths only) — useful for A/B-ing the two hot paths.
+
+The continuous engine emits a periodic observability line every
+``--metrics-every`` steps (queue depth, slot states, pool occupancy,
+p50/p95 step latency — all from ``engine.metrics()``), a full phase
+report at the end, and with ``--trace-out PATH`` exports the request
+lifecycle trace as JSONL (see docs/serving.md "Observability").
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -21,6 +28,26 @@ from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
 from repro.serve import ContinuousBatchingEngine, DecodeEngine
+from repro.serve.metrics import format_report
+
+
+def _metrics_line(step: int, m: dict) -> str:
+    """One compact periodic report line from an ``engine.metrics()``
+    snapshot."""
+    sched = m["scheduler"]
+    parts = [f"[step {step}]",
+             f"queue={sched['queue_depth']}",
+             f"active={sched['active_slots']}",
+             f"prefilling={sched['prefilling_slots']}",
+             f"finished={sched['finished']}"]
+    if "block_pool" in m:
+        parts.append(f"pool_occ={m['block_pool']['occupancy']:.2f}")
+        parts.append(f"hit_rate={m['prefix_cache']['hit_rate']:.2f}")
+    total = m["engine"]["phases"].get("step.total_s")
+    if total and total["count"]:
+        parts.append(f"p50_step={total['p50'] * 1e3:.2f}ms")
+        parts.append(f"p95_step={total['p95'] * 1e3:.2f}ms")
+    return " ".join(parts)
 
 
 def main():
@@ -43,6 +70,11 @@ def main():
     ap.add_argument("--group-size", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt", default=None, help="checkpoint dir to serve")
+    ap.add_argument("--metrics-every", type=int, default=25,
+                    help="print a metrics line every N engine steps "
+                         "(continuous engine; 0 disables)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the request-lifecycle trace as JSONL")
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch) if args.smoke else C.get_config(args.arch)
@@ -81,9 +113,22 @@ def main():
         rids = [eng.submit(p, args.tokens, temperature=args.temperature,
                            seed=i) for i, p in enumerate(prompts)]
         t0 = time.perf_counter()
-        results = eng.drain()
+        results = {}
+        step = 0
+        while eng.scheduler.pending():
+            for f in eng.step():
+                results[f.rid] = np.concatenate([f.prompt, f.tokens])
+            step += 1
+            if args.metrics_every and step % args.metrics_every == 0:
+                print(_metrics_line(step, eng.metrics()), file=sys.stderr)
         dt = time.perf_counter() - t0
         sample = results[rids[0]]
+        print(format_report(eng.metrics_registry.snapshot(),
+                            title="serve metrics"), file=sys.stderr)
+        if args.trace_out:
+            n = eng.tracer.export_jsonl(args.trace_out)
+            print(f"trace: {n} events -> {args.trace_out}",
+                  file=sys.stderr)
 
     report = {"arch": cfg.name, "engine": args.engine,
               "requests": args.requests, "n_slots": args.n_slots,
@@ -97,6 +142,12 @@ def main():
         if stats.get("enabled"):
             report["prefix_hit_rate"] = round(stats["hit_rate"], 3)
             report["prefill_tokens_saved"] = stats["saved_tokens"]
+        tsum = eng.tracer.summary()
+        if tsum["ttft_s"]:
+            report["ttft_p50_s"] = round(tsum["ttft_s"]["p50"], 5)
+            report["ttft_p95_s"] = round(tsum["ttft_s"]["p95"], 5)
+        if tsum["tpot_s"]:
+            report["tpot_p50_s"] = round(tsum["tpot_s"]["p50"], 6)
     print(json.dumps(report, indent=1))
     print("sample:", sample.tolist())
 

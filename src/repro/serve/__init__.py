@@ -1,9 +1,12 @@
 from repro.serve.engine import ContinuousBatchingEngine, DecodeEngine
 from repro.serve.kv_cache import SlotKVCache
+from repro.serve.metrics import MetricsRegistry, format_report
 from repro.serve.prefix_cache import BlockPool, RadixPrefixCache
 from repro.serve.quantized import pack_tree, packed_stats
 from repro.serve.scheduler import RequestScheduler
+from repro.serve.trace import RequestTracer, TraceWriter, read_jsonl
 
 __all__ = ["BlockPool", "ContinuousBatchingEngine", "DecodeEngine",
-           "RadixPrefixCache", "RequestScheduler", "SlotKVCache",
-           "pack_tree", "packed_stats"]
+           "MetricsRegistry", "RadixPrefixCache", "RequestScheduler",
+           "RequestTracer", "SlotKVCache", "TraceWriter", "format_report",
+           "pack_tree", "packed_stats", "read_jsonl"]

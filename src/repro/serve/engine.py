@@ -33,10 +33,13 @@ from repro.configs.base import ArchConfig
 from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
+from repro.serve import trace as tr
 from repro.serve.kv_cache import SlotKVCache
+from repro.serve.metrics import MetricsRegistry
 from repro.serve.prefix_cache import BlockPool, RadixPrefixCache
 from repro.serve.quantized import pack_tree
 from repro.serve.scheduler import Finished, RequestScheduler
+from repro.serve.trace import RequestTracer
 
 
 @jax.jit
@@ -131,9 +134,19 @@ class ContinuousBatchingEngine:
                  prefill_chunk: Optional[int] = None,
                  prefill_backlog: int = 2,
                  use_paged_kernel: bool = False,
-                 paged_impl: Optional[str] = None):
+                 paged_impl: Optional[str] = None,
+                 enable_metrics: bool = True,
+                 trace_capacity: int = 65536):
         self.cfg, self.params, self.pack_stats = _maybe_pack(
             cfg, params, packed, quant_cfg)
+        # observability substrate (docs/serving.md "Observability"):
+        # phase timers + counters in the registry, per-request lifecycle
+        # events in the tracer, all surfaced through engine.metrics().
+        # enable_metrics=False swaps in no-op instruments — the hot path
+        # pays one attribute check per phase.
+        self.metrics_registry = MetricsRegistry(enabled=enable_metrics)
+        self.tracer = RequestTracer(capacity=trace_capacity,
+                                    enabled=enable_metrics)
         self.max_len = max_len
         self.n_slots = n_slots
         self.model = Model(self.cfg)
@@ -217,22 +230,40 @@ class ContinuousBatchingEngine:
             else:
                 key = jax.random.fold_in(self._dummy_key,
                                          self.scheduler.next_rid())
-        return self.scheduler.submit(prompt, n_tokens, temperature, key,
-                                     extra)
+        rid = self.scheduler.submit(prompt, n_tokens, temperature, key,
+                                    extra)
+        self.tracer.event(tr.SUBMIT, rid, prompt_len=int(prompt.size),
+                          n_tokens=int(n_tokens))
+        return rid
 
     def step(self) -> List[Finished]:
         """One scheduler round: admit queued requests (unless the chunked
         backlog is full), run at most one chunk of prefill work, then one
-        batched decode step over the DECODING slots."""
-        if len(self._prefill_groups) < self.prefill_backlog:
-            admitted = self.scheduler.admit()
-            if admitted:
-                self._prefill_admitted(admitted)
-        if self._prefill_groups:
-            self._advance_chunk()
-        if self.scheduler.needs_decode():
-            self._decode_once()
-        return self.scheduler.pop_finished()
+        batched decode step over the DECODING slots.
+
+        Phase timers (``step.*_s`` histograms in ``metrics_registry``):
+        admit, prefix_match, prefill_dispatch, chunk_advance,
+        decode_dispatch, device_sync, sample_host — plus ``step.total_s``
+        for the whole round."""
+        m = self.metrics_registry
+        with m.timer("step.total_s"):
+            if len(self._prefill_groups) < self.prefill_backlog:
+                with m.timer("step.admit_s"):
+                    admitted = self.scheduler.admit()
+                if admitted:
+                    for slot, st in admitted:
+                        self.tracer.event(tr.ADMIT, st.req.rid, slot=slot)
+                    self._prefill_admitted(admitted)
+            if self._prefill_groups:
+                with m.timer("step.chunk_advance_s"):
+                    self._advance_chunk()
+            if self.scheduler.needs_decode():
+                self._decode_once()
+            finished = self.scheduler.pop_finished()
+        for f in finished:
+            self.tracer.event(tr.FINISH, f.rid, n_tokens=len(f.tokens))
+        m.counter("step.count").inc()
+        return finished
 
     def drain(self) -> Dict[int, np.ndarray]:
         """Step until idle. Returns {rid: prompt + generated tokens}."""
@@ -290,16 +321,39 @@ class ContinuousBatchingEngine:
         self._stat_prefill_tokens = 0
         self._stat_saved_tokens = 0
         self._stat_chunk_steps = 0
+        # back-to-back bench runs on one engine must start from clean
+        # counters: fresh lifecycle data, zeroed phase timers
+        self.metrics_registry.reset()
+        self.tracer.reset()
 
-    # -- internals ------------------------------------------------------
+    # -- observability ---------------------------------------------------
 
-    def _wire_scheduler(self) -> None:
-        self.scheduler.on_release = self._release_slot
-        self.scheduler.admission_priority = self._hit_score
+    def metrics(self) -> Dict[str, Any]:
+        """One unified observability snapshot: engine phase timers and
+        counters, scheduler gauges, prefix-cache / BlockPool stats, and
+        trace-ring health. ``prefix_stats()`` is a view of the
+        ``prefix_cache`` section; metric names/units are tabulated in
+        docs/serving.md ("Observability")."""
+        snap = self.metrics_registry.snapshot()
+        out: Dict[str, Any] = {
+            "engine": {"n_slots": self.n_slots, "max_len": self.max_len,
+                       "prefill_chunk": self.prefill_chunk,
+                       "paged_impl": self.paged_impl,
+                       "chunk_backlog_depth": len(self._prefill_groups),
+                       "phases": snap["histograms"],
+                       "counters": snap["counters"],
+                       "gauges": snap["gauges"]},
+            "scheduler": self.scheduler.gauges(),
+            "prefix_cache": self._prefix_cache_section(),
+            "trace": {"events": len(self.tracer),
+                      "dropped": self.tracer.dropped,
+                      "capacity": self.tracer.capacity},
+        }
+        if self.prefix_cache is not None:
+            out["block_pool"] = self.prefix_cache.pool.occupancy()
+        return out
 
-    def prefix_stats(self) -> Dict[str, Any]:
-        """Prefix-cache health: hit rate, tokens saved vs computed, block
-        commits/evictions, arena occupancy."""
+    def _prefix_cache_section(self) -> Dict[str, Any]:
         if self.prefix_cache is None:
             return {"enabled": False,
                     "prefill_tokens": self._stat_prefill_tokens,
@@ -313,6 +367,18 @@ class ContinuousBatchingEngine:
                    prefill_chunk=self.prefill_chunk,
                    prefill_chunk_steps=self._stat_chunk_steps)
         return out
+
+    def prefix_stats(self) -> Dict[str, Any]:
+        """Prefix-cache health: hit rate, tokens saved vs computed, block
+        commits/evictions, arena occupancy. Delegates to
+        :meth:`metrics` — same dict as ``metrics()['prefix_cache']``."""
+        return self._prefix_cache_section()
+
+    # -- internals ------------------------------------------------------
+
+    def _wire_scheduler(self) -> None:
+        self.scheduler.on_release = self._release_slot
+        self.scheduler.admission_priority = self._hit_score
 
     # -- internals ------------------------------------------------------
 
@@ -344,6 +410,7 @@ class ContinuousBatchingEngine:
         bs = self.cache.block_size
         ok, failed = [], []
         for slot, st in admitted:
+            rid = st.req.rid
             req = st.req
             s0 = len(req.prompt)
             need = -(-(s0 + req.n_tokens) // bs)
@@ -359,9 +426,16 @@ class ContinuousBatchingEngine:
             if ids is None:
                 self.prefix_cache.release(matched)
                 failed.append(slot)
+                self.tracer.event(tr.UNADMIT, rid, slot=slot,
+                                  blocks_needed=own,
+                                  blocks_free=pool.n_free())
                 continue
             if not req.extra:
                 self.prefix_cache.count_lookup(matched)
+            if matched:
+                self.tracer.event(tr.PREFIX_HIT, rid, slot=slot,
+                                  blocks=len(matched),
+                                  tokens=len(matched) * bs)
             pool.incref(ids)
             if self.prefill_chunk is None:
                 self.cache.set_table(slot, matched + ids)
@@ -402,11 +476,18 @@ class ContinuousBatchingEngine:
         # share a batch): one batched prefill per group keeps the jit
         # shapes bounded and makes lockstep admission numerically identical
         # to a static-batch prefill.
+        m = self.metrics_registry
         if self.prefix_cache is not None:
-            admitted = self._assign_blocks(admitted)
+            with m.timer("step.prefix_match_s"):
+                admitted = self._assign_blocks(admitted)
             if self.prefill_chunk is not None:
-                self._stage_chunked(admitted)
+                with m.timer("step.chunk_advance_s"):
+                    self._stage_chunked(admitted)
                 return
+        with m.timer("step.prefill_dispatch_s"):
+            self._run_prefill(admitted)
+
+    def _run_prefill(self, admitted) -> None:
         groups: Dict[Any, list] = {}
         for slot, st in admitted:
             ex = st.req.extra
@@ -462,7 +543,8 @@ class ContinuousBatchingEngine:
                 [st.req.temperature for _, st in group], jnp.float32)
             steps = jnp.zeros(g, jnp.int32)
             first = np.asarray(sample_step(logits, keys, steps, temps))
-            for (slot, _), tok in zip(group, first):
+            for (slot, st), tok in zip(group, first):
+                self.tracer.event(tr.FIRST_TOKEN, st.req.rid, slot=slot)
                 self.scheduler.record_prefill(slot, tok)
 
     def _stage_chunked(self, admitted) -> None:
@@ -567,6 +649,9 @@ class ContinuousBatchingEngine:
             nb = -(-n_valid // bs)
             self.cache.scatter_row(tree, i, meta["owned"][b0:b0 + nb],
                                    meta["prefix_blocks"] + b0, n_valid)
+            self.tracer.event(tr.PREFILL_CHUNK, st.req.rid, slot=slot,
+                              index=k, n_chunks=grp["n_chunks"],
+                              tokens=int(n_valid))
         if not final:
             # round-robin across in-flight groups: a 1-chunk group (short
             # prompt) admitted behind a long prefill is serviced on the
@@ -583,24 +668,41 @@ class ContinuousBatchingEngine:
             [st.req.temperature for _, st in grp["members"]], jnp.float32)
         first = np.asarray(sample_step(logits, keys,
                                        jnp.zeros(g, jnp.int32), temps))
-        for (slot, _), tok in zip(grp["members"], first):
+        for (slot, st), tok in zip(grp["members"], first):
+            self.tracer.event(tr.FIRST_TOKEN, st.req.rid, slot=slot)
             self.scheduler.record_prefill(slot, tok)
 
     def _decode_once(self) -> None:
+        m = self.metrics_registry
         toks, idxs, steps, temps, keys = self.scheduler.decode_batch(
             self._dummy_key)
-        if self.prefix_cache is not None:
-            logits, tree = self._decode(
-                self.params, jnp.asarray(toks)[:, None], self.cache.tree,
-                jnp.asarray(idxs), self.cache.tables_device())
-        else:
-            logits, tree = self._decode(
-                self.params, jnp.asarray(toks)[:, None], self.cache.tree,
-                jnp.asarray(idxs))
-        self.cache.tree = tree
-        nxt = sample_step(logits, jnp.stack(keys), jnp.asarray(steps),
-                          jnp.asarray(temps))
-        self.scheduler.record_decode(np.asarray(nxt))
+        # (slot, rid, step) of the live rows — captured before
+        # record_decode frees finished slots
+        live = [(s, self.scheduler.slots[s].req.rid, int(steps[s]))
+                for s in self.scheduler._decoding] if self.tracer.enabled \
+            else []
+        with m.timer("step.decode_dispatch_s"):
+            if self.prefix_cache is not None:
+                logits, tree = self._decode(
+                    self.params, jnp.asarray(toks)[:, None],
+                    self.cache.tree, jnp.asarray(idxs),
+                    self.cache.tables_device())
+            else:
+                logits, tree = self._decode(
+                    self.params, jnp.asarray(toks)[:, None],
+                    self.cache.tree, jnp.asarray(idxs))
+            self.cache.tree = tree
+        if m.enabled:
+            # split device wait from host-side sampling: logits are about
+            # to be consumed either way, so the sync is not extra work
+            with m.timer("step.device_sync_s"):
+                jax.block_until_ready(logits)
+        with m.timer("step.sample_host_s"):
+            nxt = sample_step(logits, jnp.stack(keys), jnp.asarray(steps),
+                              jnp.asarray(temps))
+            self.scheduler.record_decode(np.asarray(nxt))
+        for slot, rid, step in live:
+            self.tracer.event(tr.DECODE_STEP, rid, slot=slot, step=step)
 
 
 # ---------------------------------------------------------------------------

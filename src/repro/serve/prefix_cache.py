@@ -73,6 +73,19 @@ class BlockPool:
         for b in ids:
             self.refcount[b] += 1
 
+    def occupancy(self) -> Dict[str, float]:
+        """Arena occupancy gauges for ``engine.metrics()['block_pool']``
+        (the reserved trash block 0 is excluded from the usable count)."""
+        usable = self.n_blocks - 1
+        free = len(self._free)
+        return {"n_blocks": self.n_blocks,
+                "usable_blocks": usable,
+                "free_blocks": free,
+                "used_blocks": usable - free,
+                "referenced_blocks": int(
+                    np.count_nonzero(self.refcount[1:])),
+                "occupancy": (usable - free) / max(usable, 1)}
+
     def decref(self, ids: Sequence[int]) -> None:
         for b in ids:
             self.refcount[b] -= 1

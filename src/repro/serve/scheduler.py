@@ -71,6 +71,18 @@ class RequestScheduler:
         self._next_rid = 0
         self._finished: List[Finished] = []
         self._decoding: List[int] = []
+        # gauges, maintained incrementally on every transition (admit /
+        # unadmit / record_prefill / finish) rather than recounted per
+        # step — ``gauges()`` exposes them and ``recount()`` recomputes
+        # them from SlotStates so tests can pin "no drift", in particular
+        # across ``unadmit()`` rollbacks under pool starvation
+        self.n_active = 0        # slots holding a request (any phase)
+        self.n_prefilling = 0    # slots still landing their prompt
+        # lifetime counters (monotonic; engine.metrics() surfaces them)
+        self.n_submitted = 0
+        self.n_admitted = 0
+        self.n_unadmitted = 0
+        self.n_finished = 0
         # cache-aware admission: score queued requests (higher first, FIFO
         # tie-break) when more are queued than slots are free — the engine
         # plugs in expected prefix-cache hit length so requests that reuse
@@ -92,6 +104,7 @@ class RequestScheduler:
                key, extra=None) -> int:
         rid = self._next_rid
         self._next_rid += 1
+        self.n_submitted += 1
         self.queue.append(Request(rid, np.asarray(prompt, np.int32),
                                   n_tokens, temperature, key, extra))
         return rid
@@ -120,16 +133,24 @@ class RequestScheduler:
         for slot, req in zip(free, picked):
             st = SlotState(req)
             self.slots[slot] = st
+            self.n_active += 1
+            self.n_prefilling += 1
+            self.n_admitted += 1
             admitted.append((slot, st))
         return admitted
 
     def unadmit(self, slot: int) -> None:
         """Undo an admission (before any token was generated): the request
         goes back to the front of the queue — the engine uses this when
-        the block pool cannot cover the request yet."""
+        the block pool cannot cover the request yet. Rolls the admission
+        gauges back exactly (pinned by the pool-starvation regression
+        test against ``recount()``)."""
         st = self.slots[slot]
         assert st is not None and st.n_gen == 0
         self.slots[slot] = None
+        self.n_active -= 1
+        self.n_prefilling -= 1
+        self.n_unadmitted += 1
         self.queue.appendleft(st.req)
 
     # ------------------------------------------------------------------
@@ -141,6 +162,7 @@ class RequestScheduler:
         sampled: PREFILLING -> DECODING (or straight to finished)."""
         st = self.slots[slot]
         st.phase = DECODING
+        self.n_prefilling -= 1
         if st.req.n_tokens == 0:  # degenerate: nothing to generate
             self._finish(slot)
             return
@@ -200,6 +222,8 @@ class RequestScheduler:
             st.req.rid, st.req.prompt,
             np.asarray(st.tokens, np.int32)))
         self.slots[slot] = None  # evict: slot is immediately reusable
+        self.n_active -= 1
+        self.n_finished += 1
         if self.on_release is not None:
             self.on_release(slot, st)
 
@@ -209,3 +233,31 @@ class RequestScheduler:
 
     def pending(self) -> bool:
         return bool(self.queue) or any(st is not None for st in self.slots)
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def gauges(self) -> Dict[str, int]:
+        """Incrementally maintained scheduler gauges + lifetime counters
+        (surfaced by ``engine.metrics()['scheduler']``)."""
+        return {"queue_depth": len(self.queue),
+                "active_slots": self.n_active,
+                "prefilling_slots": self.n_prefilling,
+                "decoding_slots": self.n_active - self.n_prefilling,
+                "free_slots": self.n_slots - self.n_active,
+                "submitted": self.n_submitted,
+                "admitted": self.n_admitted,
+                "unadmitted": self.n_unadmitted,
+                "finished": self.n_finished}
+
+    def recount(self) -> Dict[str, int]:
+        """Gauges recomputed from the SlotStates — the drift oracle the
+        incremental ``gauges()`` counters are tested against."""
+        active = [st for st in self.slots if st is not None]
+        prefilling = sum(st.phase == PREFILLING for st in active)
+        return {"queue_depth": len(self.queue),
+                "active_slots": len(active),
+                "prefilling_slots": prefilling,
+                "decoding_slots": len(active) - prefilling,
+                "free_slots": self.n_slots - len(active)}

@@ -1,0 +1,277 @@
+"""Trace semantics + engine-level observability integration.
+
+Pins the request-lifecycle contract of `repro.serve.trace`:
+
+  * TTFT is exactly (first_token ts - submit ts); queue wait exactly
+    (admit ts - submit ts); TPOT the mean decode-step delta;
+  * events are strictly ordered per rid (lifecycle phases never regress,
+    timestamps never decrease) — including under chunked prefill and
+    prefix hits;
+  * JSONL export round-trips bit-exactly (TraceWriter -> parse -> the
+    same events);
+  * `engine.metrics()` is one unified snapshot, `prefix_stats()` is a
+    view of it, and `engine.reset()` clears metrics + trace so
+    back-to-back bench runs on one engine start from clean counters;
+  * scheduler gauges survive `unadmit()` under pool starvation with no
+    drift vs a recount.
+"""
+import functools
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import ContinuousBatchingEngine
+from repro.serve import trace as tr
+from repro.serve.trace import read_jsonl
+
+MAX_LEN = 48
+BS = 8
+
+# lifecycle phase rank per event kind: per-rid streams must never regress
+# (UNADMIT shares ADMIT's rank — a starved request legitimately bounces)
+_PHASE = {tr.SUBMIT: 0, tr.ADMIT: 1, tr.UNADMIT: 1, tr.PREFIX_HIT: 1,
+          tr.PREFILL_CHUNK: 2, tr.FIRST_TOKEN: 3, tr.DECODE_STEP: 4,
+          tr.FINISH: 5}
+
+
+@functools.cache
+def _setup():
+    cfg = C.get_smoke("smollm-135m").replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    return cfg, params
+
+
+def _engine(n_slots=2, **kw):
+    cfg, params = _setup()
+    return ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
+                                    n_slots=n_slots, prefix_cache=True,
+                                    block_size=BS, **kw)
+
+
+def _prompt(rng, n):
+    cfg, _ = _setup()
+    return rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+
+
+def _assert_ordered(events):
+    assert events, "rid left no events"
+    kinds = [e.kind for e in events]
+    assert kinds[0] == tr.SUBMIT and kinds[-1] == tr.FINISH
+    ts = [e.ts for e in events]
+    assert ts == sorted(ts), "timestamps regressed"
+    # a re-admission after unadmit may legally repeat phase 1; other
+    # than that bounce, the lifecycle only moves forward
+    ranks = [_PHASE[k] for k in kinds]
+    for a, b in zip(ranks, ranks[1:]):
+        assert b >= a or b == 1, (kinds, "lifecycle regressed")
+
+
+# ---------------------------------------------------------------------------
+# Derived-interval semantics
+# ---------------------------------------------------------------------------
+
+
+def test_ttft_tpot_queue_wait_from_raw_events(rng):
+    eng = _engine()
+    rid = eng.submit(_prompt(rng, 10), 6)
+    eng.drain()
+    evs = eng.tracer.events(rid)
+    _assert_ordered(evs)
+    first_of = {}
+    for e in evs:
+        first_of.setdefault(e.kind, e)
+    stats = eng.tracer.request_stats(rid)
+    assert stats["ttft_s"] == (first_of[tr.FIRST_TOKEN].ts
+                               - first_of[tr.SUBMIT].ts)
+    assert stats["queue_wait_s"] == (first_of[tr.ADMIT].ts
+                                     - first_of[tr.SUBMIT].ts)
+    dec = [e for e in evs if e.kind == tr.DECODE_STEP]
+    # 6 generated tokens: first from prefill, 5 from decode steps
+    assert len(dec) == 5 and stats["n_decode_steps"] == 5
+    assert stats["tpot_s"] == ((dec[-1].ts - first_of[tr.FIRST_TOKEN].ts)
+                               / len(dec))
+    # decode steps carry their fold-in step index, strictly increasing
+    assert [e.fields["step"] for e in dec] == list(range(1, 6))
+
+
+def test_interleaved_requests_each_strictly_ordered(rng):
+    eng = _engine(n_slots=2)
+    rids = []
+    for i in range(5):  # more requests than slots: recycling + queueing
+        rids.append(eng.submit(_prompt(rng, 4 + 3 * i), 4 + i, seed=i))
+        eng.step()
+    eng.drain()
+    for rid in rids:
+        _assert_ordered(eng.tracer.events(rid))
+    summ = eng.tracer.summary()
+    assert summ["requests"] == 5 and summ["dropped"] == 0
+    assert summ["ttft_s"]["n"] == 5 and summ["tpot_s"]["n"] == 5
+
+
+def test_chunked_prefill_and_prefix_hit_events(rng):
+    eng = _engine(n_slots=2, prefill_chunk=BS)
+    base = _prompt(rng, 2 * BS + 3)
+    r1 = eng.submit(base, 4, seed=0)
+    eng.drain()  # commits base's blocks
+    tail = np.concatenate([base, _prompt(rng, 5)])
+    r2 = eng.submit(tail, 4, seed=1)
+    eng.drain()
+    evs1, evs2 = eng.tracer.events(r1), eng.tracer.events(r2)
+    _assert_ordered(evs1)
+    _assert_ordered(evs2)
+    # r1: no cached prefix -> ceil((2*BS+3)/BS) = 3 chunks, no prefix_hit
+    assert sum(e.kind == tr.PREFILL_CHUNK for e in evs1) == 3
+    assert not any(e.kind == tr.PREFIX_HIT for e in evs1)
+    # r2: 2 blocks cached -> prefix_hit(blocks=2), suffix of 8 -> 1 chunk
+    hit = next(e for e in evs2 if e.kind == tr.PREFIX_HIT)
+    assert hit.fields["blocks"] == 2 and hit.fields["tokens"] == 2 * BS
+    assert sum(e.kind == tr.PREFILL_CHUNK for e in evs2) == 1
+    assert eng.tracer.request_stats(r2)["prefix_hit_blocks"] == 2
+
+
+def test_jsonl_roundtrip_same_events(rng, tmp_path):
+    eng = _engine(n_slots=2, prefill_chunk=BS)
+    base = _prompt(rng, 2 * BS + 3)
+    for i in range(3):
+        eng.submit(np.concatenate([base, _prompt(rng, 3 + i)]), 5, seed=i)
+        eng.step()
+    eng.drain()
+    events = eng.tracer.events()
+    assert {e.kind for e in events} >= {tr.SUBMIT, tr.ADMIT, tr.PREFIX_HIT,
+                                        tr.PREFILL_CHUNK, tr.FIRST_TOKEN,
+                                        tr.DECODE_STEP, tr.FINISH}
+    path = str(tmp_path / "trace.jsonl")
+    n = eng.tracer.export_jsonl(path)
+    assert n == len(events)
+    back = read_jsonl(path)
+    assert back == events  # bit-exact: kinds, rids, ts floats, fields
+    # wall-clock stamps ride along and preserve the monotonic deltas
+    with open(path) as f:
+        import json as _json
+        walls = [_json.loads(ln)["ts_wall"] for ln in f]
+    assert walls == sorted(walls)
+
+
+def test_trace_ring_is_bounded(rng):
+    eng = _engine(trace_capacity=16)
+    for i in range(3):
+        eng.submit(_prompt(rng, 6), 8, seed=i)
+    eng.drain()
+    assert len(eng.tracer) == 16
+    assert eng.tracer.dropped > 0
+    assert eng.metrics()["trace"]["dropped"] == eng.tracer.dropped
+
+
+# ---------------------------------------------------------------------------
+# engine.metrics() — the unified snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_unified_snapshot_and_prefix_stats_view(rng):
+    eng = _engine()
+    eng.submit(_prompt(rng, 12), 6)
+    eng.drain()
+    m = eng.metrics()
+    assert set(m) == {"engine", "scheduler", "prefix_cache", "block_pool",
+                      "trace"}
+    assert m["engine"]["phases"]["step.total_s"]["count"] > 0
+    for phase in ("step.admit_s", "step.decode_dispatch_s",
+                  "step.device_sync_s", "step.sample_host_s",
+                  "step.prefix_match_s"):
+        assert phase in m["engine"]["phases"], phase
+    assert m["scheduler"]["finished"] == 1
+    assert m["scheduler"]["queue_depth"] == 0
+    assert m["block_pool"]["used_blocks"] >= 1
+    assert 0 < m["block_pool"]["occupancy"] <= 1
+    assert m["prefix_cache"]["prefill_tokens"] == 12
+    # prefix_stats() is a view of the unified snapshot
+    assert eng.prefix_stats() == m["prefix_cache"]
+
+
+def test_reset_clears_metrics_and_trace(rng):
+    """Back-to-back bench runs on one engine start from clean counters:
+    a reset pass must report identical lifecycle counts to the first."""
+    eng = _engine(prefill_chunk=BS)
+
+    def run():
+        for i in range(3):
+            eng.submit(_prompt(rng, 5 + 4 * i), 4, seed=i)
+        eng.drain()
+        m = eng.metrics()
+        return {"steps": m["engine"]["counters"]["step.count"],
+                "finished": m["scheduler"]["finished"],
+                "submitted": m["scheduler"]["submitted"],
+                "prefill_tokens": m["prefix_cache"]["prefill_tokens"],
+                "events": m["trace"]["events"]}
+
+    rng_state = rng.bit_generator.state
+    first = run()
+    assert first["finished"] == 3 and first["events"] > 0
+    eng.reset()
+    assert len(eng.tracer) == 0 and eng.tracer.dropped == 0
+    m = eng.metrics()
+    assert m["scheduler"]["submitted"] == 0
+    assert m["engine"]["counters"].get("step.count", 0) == 0
+    assert m["engine"]["phases"]["step.total_s"]["count"] == 0
+    assert m["prefix_cache"]["prefill_tokens"] == 0
+    assert m["prefix_cache"]["lookups"] == 0
+    rng.bit_generator.state = rng_state  # same prompts second time
+    assert run() == first
+
+
+def test_disabled_observability_is_inert_and_token_exact(rng):
+    prompts = [_prompt(rng, 7 + i) for i in range(3)]
+    on, off = _engine(), _engine(enable_metrics=False)
+    outs = []
+    for eng in (on, off):
+        rids = [eng.submit(p, 5, seed=i) for i, p in enumerate(prompts)]
+        out = eng.drain()
+        outs.append([out[r] for r in rids])
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a, b)
+    assert len(off.tracer) == 0
+    m = off.metrics()
+    assert m["engine"]["phases"] == {} and m["engine"]["counters"] == {}
+    # scheduler gauges and prefix stats still work (pure bookkeeping)
+    assert m["scheduler"]["finished"] == 3
+    assert m["prefix_cache"]["prefill_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler gauges under pool starvation (engine-level regression)
+# ---------------------------------------------------------------------------
+
+
+def test_unadmit_under_pool_starvation_no_gauge_drift(rng):
+    """Starve the BlockPool so admissions bounce via ``unadmit()`` for
+    several steps: after every step the incremental scheduler gauges must
+    equal a recount from the SlotStates, and the bounces must be visible
+    as unadmit events/counters."""
+    eng = _engine(n_slots=2, prefill_chunk=BS)
+    pool = eng.prefix_cache.pool
+    pinned = pool.alloc(pool.n_free())
+    pool.incref(pinned)
+    rids = [eng.submit(_prompt(rng, 10 + i), 5, seed=i) for i in range(2)]
+    for _ in range(3):
+        eng.step()
+        g = eng.scheduler.gauges()
+        for k, v in eng.scheduler.recount().items():
+            assert g[k] == v, f"gauge {k} drifted after starved step"
+    g = eng.scheduler.gauges()
+    assert g["unadmitted"] >= 2 and g["queue_depth"] == 2
+    assert g["active_slots"] == 0 and g["prefilling_slots"] == 0
+    unadmits = [e for e in eng.tracer.events() if e.kind == tr.UNADMIT]
+    assert len(unadmits) == g["unadmitted"]
+    assert all(e.fields["blocks_free"] == 0 for e in unadmits)
+
+    pool.decref(pinned)
+    pool.free(pinned)
+    out = eng.drain()
+    assert sorted(out) == sorted(rids)
+    g = eng.scheduler.gauges()
+    for k, v in eng.scheduler.recount().items():
+        assert g[k] == v, f"gauge {k} drifted after drain"
+    assert g["finished"] == 2 and g["free_slots"] == 2
