@@ -16,7 +16,12 @@ actually present in the run —
 * ``decode_heavy``: the fused paged-decode pass must not materialize
   gathered K/V and its p95 step latency must be no worse than the gather
   reference pass (``--min-paged-speedup``, default 1.0, with a small
-  tolerance for CPU timer noise).
+  tolerance for CPU timer noise);
+* ``mixed_load``: the fused mixed-step pass must actually run fused
+  (``fused_step`` true), issue strictly fewer model dispatches than the
+  separate chunk-then-decode pass on the same traffic, and its p95 step
+  latency must be no worse than the separate pass
+  (``--min-fused-speedup``, default 1.0, same noise tolerance).
 
 Workloads absent from the report are skipped, so the script composes with
 any ``--workloads`` selection. Exits non-zero with a reason on failure.
@@ -99,7 +104,8 @@ def check_metrics(results, metrics_dir):
 
 
 def check(results, min_speedup, min_paged_speedup=1.0,
-          allow_missing_speedup=False, noise_tolerance=0.1):
+          min_fused_speedup=1.0, allow_missing_speedup=False,
+          noise_tolerance=0.1):
     errors = []
     sp = results.get("shared_prefix")
     if sp is not None:
@@ -144,6 +150,34 @@ def check(results, min_speedup, min_paged_speedup=1.0,
                     f"decode_heavy paged p95 step speedup {speedup} < "
                     f"{min_paged_speedup} (fused {dh.get('p95_step_s')}s "
                     f"vs gather {dh.get('p95_step_s_gather')}s)")
+    ml = results.get("mixed_load")
+    if ml is not None:
+        if not ml.get("fused_step", False):
+            errors.append(
+                f"mixed_load gated pass did not run fused "
+                f"(fused_step={ml.get('fused_step')!r}) — the mixed "
+                f"dispatch was not in effect")
+        if "model_dispatches_separate" in ml:
+            fused_d = ml.get("model_dispatches")
+            sep_d = ml["model_dispatches_separate"]
+            if not (isinstance(fused_d, int) and fused_d < sep_d):
+                errors.append(
+                    f"mixed_load fused pass did not reduce model "
+                    f"dispatches: {fused_d} vs separate {sep_d}")
+        if "fused_p95_speedup" not in ml:
+            if not allow_missing_speedup:
+                errors.append(
+                    "mixed_load has no fused_p95_speedup (fused vs "
+                    "separate comparison missing); pass "
+                    "--allow-missing-speedup if that is intentional")
+        else:
+            speedup = ml["fused_p95_speedup"]
+            floor = min_fused_speedup * (1.0 - noise_tolerance)
+            if not speedup >= floor:
+                errors.append(
+                    f"mixed_load fused p95 step speedup {speedup} < "
+                    f"{min_fused_speedup} (fused {ml.get('p95_step_s')}s "
+                    f"vs separate {ml.get('p95_step_s_separate')}s)")
     return errors
 
 
@@ -157,6 +191,11 @@ def main():
                     help="required p95 step-latency ratio of the gather "
                          "reference over the fused paged decode on the "
                          "decode_heavy workload (1.0 = no worse)")
+    ap.add_argument("--min-fused-speedup", type=float, default=1.0,
+                    help="required p95 step-latency ratio of the separate "
+                         "chunk-then-decode path over the fused mixed "
+                         "step on the mixed_load workload (1.0 = no "
+                         "worse)")
     ap.add_argument("--allow-missing-speedup", action="store_true",
                     help="skip (rather than fail) speedup assertions when "
                          "the comparison fields are absent from the report")
@@ -168,7 +207,7 @@ def main():
     with open(args.report) as f:
         results = json.load(f)
     errors = check(results, args.min_speedup, args.min_paged_speedup,
-                   args.allow_missing_speedup)
+                   args.min_fused_speedup, args.allow_missing_speedup)
     if args.require_metrics:
         errors += check_metrics(results, args.require_metrics)
     for e in errors:

@@ -21,6 +21,12 @@ Workloads model the traffic shapes a serving fleet actually sees:
                  (fused paged kernel + gather reference) and report p50/p95
                  step latency each way plus the per-step gathered bytes
                  each path materializes
+  mixed_load     chunked long prompts landing while a deep decode
+                 population keeps generating — every chunk-servicing step
+                 pays prefill AND decode; run twice (fused mixed step +
+                 separate chunk-then-decode) and report p50/p95 step
+                 latency each way plus model dispatches per pass (the
+                 fused step's one-launch win)
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--packed] \
           [--arch smollm-135m --n-slots 4 --requests 12] \
@@ -64,7 +70,7 @@ import repro.configs as C
 from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
-from repro.serve import ContinuousBatchingEngine
+from repro.serve import ContinuousBatchingEngine, EngineConfig, SamplingParams
 
 MAX_LEN = 64
 LONG_MAX_LEN = 512
@@ -73,6 +79,10 @@ LONG_PROMPT_LEN = 14 * LONG_PREFILL_CHUNK  # 448 tokens, 14 chunks
 HEAVY_MAX_LEN = 192
 HEAVY_PREFIX_LEN = 120  # 15 blocks of committed context per request
 HEAVY_N_SLOTS = 8
+MIXED_MAX_LEN = 160
+MIXED_PREFILL_CHUNK = 16
+MIXED_PROMPT_LEN = 6 * MIXED_PREFILL_CHUNK  # 96 tokens, 6 chunks
+MIXED_N_SLOTS = 6
 
 
 def _requests_uniform(rng, cfg, n):
@@ -136,13 +146,33 @@ def _requests_decode_heavy(rng, cfg, n):
     return out
 
 
+def _requests_mixed_load(rng, cfg, n):
+    """Deep decoders occupy most slots from step 0 while chunked long
+    prompts keep arriving: every chunk-servicing step pays one chunk of
+    prefill AND a full decode batch — separate, that is two sequenced
+    launches per step; fused, one mixed dispatch."""
+    n_long = max(1, n // 3)
+    out = []
+    for i in range(max(0, n - n_long)):
+        prompt = rng.integers(0, cfg.vocab, (6,)).astype(np.int32)
+        out.append((prompt, 40, 0))
+    for i in range(n_long):
+        prompt = rng.integers(0, cfg.vocab,
+                              (MIXED_PROMPT_LEN,)).astype(np.int32)
+        out.append((prompt, 8, 2 + i * 3))
+    return out
+
+
 WORKLOADS = {"uniform": _requests_uniform, "mixed": _requests_mixed,
              "shared_prefix": _requests_shared_prefix,
              "long_prompt": _requests_long_prompt,
-             "decode_heavy": _requests_decode_heavy}
+             "decode_heavy": _requests_decode_heavy,
+             "mixed_load": _requests_mixed_load}
 WORKLOAD_MAX_LEN = {"long_prompt": LONG_MAX_LEN,
-                    "decode_heavy": HEAVY_MAX_LEN}
-WORKLOAD_N_SLOTS = {"decode_heavy": HEAVY_N_SLOTS}
+                    "decode_heavy": HEAVY_MAX_LEN,
+                    "mixed_load": MIXED_MAX_LEN}
+WORKLOAD_N_SLOTS = {"decode_heavy": HEAVY_N_SLOTS,
+                    "mixed_load": MIXED_N_SLOTS}
 
 
 def _decode_gathered_bytes(eng, cfg):
@@ -163,7 +193,7 @@ def _decode_gathered_bytes(eng, cfg):
 def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
                  prefix_cache=True, block_size=8, prefill_chunk=None,
                  max_len=None, passes=3, use_paged_kernel=False,
-                 artifacts_dir=None, artifact_tag=None):
+                 fused_step=False, artifacts_dir=None, artifact_tag=None):
     max_len = max_len or WORKLOAD_MAX_LEN.get(name, MAX_LEN)
     n_slots = WORKLOAD_N_SLOTS.get(name, n_slots)
     if not prefix_cache:
@@ -172,13 +202,11 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
     reqs = WORKLOADS[name](rng, cfg, requests)
     total_tokens = sum(n for _, n, _ in reqs)
 
-    eng = ContinuousBatchingEngine(cfg, params, max_len=max_len,
-                                   n_slots=n_slots, packed=packed,
-                                   quant_cfg=qcfg,
-                                   prefix_cache=prefix_cache,
-                                   block_size=block_size,
-                                   prefill_chunk=prefill_chunk,
-                                   use_paged_kernel=use_paged_kernel)
+    eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+        max_len=max_len, n_slots=n_slots, packed=packed, quant_cfg=qcfg,
+        prefix_cache=prefix_cache, block_size=block_size,
+        prefill_chunk=prefill_chunk, use_paged_kernel=use_paged_kernel,
+        fused_step=fused_step))
 
     def one_pass():
         """Drive the traffic; all timing observability comes from the
@@ -190,7 +218,8 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
         while done < len(reqs):
             while pending and reqs[pending[0]][2] <= step:
                 i = pending.pop(0)
-                eng.submit(reqs[i][0], reqs[i][1])
+                eng.submit(reqs[i][0],
+                           SamplingParams(max_tokens=reqs[i][1]))
             done += len(eng.step())
             step += 1
         return time.perf_counter() - t0
@@ -202,6 +231,9 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
         return {"wall_s": round(dt, 3),
                 "tok_per_s": round(total_tokens / dt, 1),
                 "steps": hs["count"],
+                "model_dispatches":
+                    eng.metrics_registry.counter(
+                        "step.model_dispatches").value,
                 "p50_step_s": round(hs["p50"], 5),
                 "p95_step_s": round(hs["p95"], 5),
                 "max_step_s": round(hs["max"], 5),
@@ -242,6 +274,7 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
            "prefix_cache": eng.prefix_cache is not None,
            "prefill_chunk": eng.prefill_chunk,
            "paged_impl": eng.paged_impl,
+           "fused_step": eng.fused_step,
            "requests": len(reqs), "n_slots": n_slots,
            "gen_tokens": total_tokens, **best}
     if eng.prefix_cache is not None:
@@ -375,6 +408,23 @@ def main():
             rep["paged_p95_speedup"] = round(
                 rep_g["p95_step_s"] / rep["p95_step_s"], 2)
             print(json.dumps(rep_g))
+        elif name == "mixed_load" and not args.no_prefix_cache:
+            # fused mixed step vs the separate chunk-then-decode path on
+            # the same traffic: the fused report is the gated one, with
+            # the separate pass's latency and dispatch count alongside —
+            # the dispatch delta is the fused step's structural win
+            chunk = args.prefill_chunk or MIXED_PREFILL_CHUNK
+            rep = run_workload(name, cfg, params, prefill_chunk=chunk,
+                               fused_step=True, **common)
+            rep_s = run_workload(name, cfg, params, prefill_chunk=chunk,
+                                 fused_step=False,
+                                 artifact_tag=f"{name}_separate", **common)
+            rep["p50_step_s_separate"] = rep_s["p50_step_s"]
+            rep["p95_step_s_separate"] = rep_s["p95_step_s"]
+            rep["model_dispatches_separate"] = rep_s["model_dispatches"]
+            rep["fused_p95_speedup"] = round(
+                rep_s["p95_step_s"] / rep["p95_step_s"], 2)
+            print(json.dumps(rep_s))
         else:
             rep = run_workload(name, cfg, params,
                                prefill_chunk=args.prefill_chunk, **common)

@@ -14,7 +14,8 @@ import repro.configs as C
 from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
-from repro.serve import ContinuousBatchingEngine, DecodeEngine
+from repro.serve import (ContinuousBatchingEngine, DecodeEngine,
+                         EngineConfig, SamplingParams)
 from repro.serve.metrics import format_report
 
 
@@ -31,9 +32,8 @@ def main():
     params = pp.init_params(Model(cfg).build(), jax.random.key(0))
 
     qcfg = QuantConfig(method="swis", n_shifts=args.n_shifts, group_size=4)
-    eng = ContinuousBatchingEngine(cfg, params, max_len=64,
-                                   n_slots=args.n_slots, packed=True,
-                                   quant_cfg=qcfg)
+    eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(
+        max_len=64, n_slots=args.n_slots, packed=True, quant_cfg=qcfg))
     print(f"packed {eng.pack_stats['n_packed']} GEMM weights, "
           f"compression {eng.pack_stats['compression']:.2f}x "
           f"(N={args.n_shifts} shifts, group 4); "
@@ -51,11 +51,12 @@ def main():
         for f in finished:
             results[f.rid] = np.concatenate([f.prompt, f.tokens])
 
-    rids = [eng.submit(p, args.tokens, seed=i)
+    rids = [eng.submit(p, SamplingParams(max_tokens=args.tokens, seed=i))
             for i, (p) in enumerate(prompts[: len(prompts) // 2 + 1])]
     for _ in range(4):  # decode a few steps before the late arrivals
         collect(eng.step())
-    rids += [eng.submit(p, args.tokens, seed=len(rids) + i)
+    rids += [eng.submit(p, SamplingParams(max_tokens=args.tokens,
+                                          seed=len(rids) + i))
              for i, p in enumerate(prompts[len(prompts) // 2 + 1:])]
     results.update(eng.drain())
 

@@ -1,23 +1,33 @@
-"""Pallas TPU kernel: paged GQA decode attention over a block arena.
+"""Pallas TPU kernel: paged GQA attention over a block arena.
 
-Single-token decode against the serve engine's physical-block KV arena
-(``repro.serve.kv_cache.SlotKVCache`` block mode) *without* materializing
-the gathered K/V. The gather path (``models/attention.py``) re-builds an
-O(B * n_logical_blocks * block_size * Hkv * Dh) contiguous view of every
-slot's cache each step — exactly the copy paged attention exists to avoid.
-Here the grid iterates (slot, kv-head, logical block); each program reads
-``block_tables[slot, j]`` from SMEM (scalar prefetch, so the index is known
-before the body runs) and DMAs only that physical K/V block into VMEM. The
-softmax is accumulated online across the block axis (flash-decoding style):
-running max / denominator / weighted-V scratch persists across the
-innermost grid dimension and the output block is finalized on the last
-logical block.
+Decode (and mixed chunk+decode) attention against the serve engine's
+physical-block KV arena (``repro.serve.kv_cache.SlotKVCache`` block mode)
+*without* materializing the gathered K/V. The gather path
+(``models/attention.py``) re-builds an O(B * n_logical_blocks * block_size
+* Hkv * Dh) contiguous view of every slot's cache each step — exactly the
+copy paged attention exists to avoid. Here the grid iterates (slot,
+kv-head, logical block); each program reads ``block_tables[slot, j]`` from
+SMEM (scalar prefetch, so the index is known before the body runs) and
+DMAs only that physical K/V block into VMEM. The softmax is accumulated
+online across the block axis (flash-decoding style): running max /
+denominator / weighted-V scratch persists across the innermost grid
+dimension and the output block is finalized on the last logical block.
+
+Rows may carry more than one query token (the fused mixed step batches
+one-token decode rows together with an S-token prefill chunk row): row
+``b``'s queries sit at absolute positions ``q_pos[b] + [0, S)`` and only
+the first ``q_lens[b]`` of them are real — ``q_lens`` rides in as a
+scalar-prefetch operand so decode rows (``q_lens == 1``) and chunk rows
+(``q_lens == n_valid``) coexist in one grid, and queries past a row's
+count are masked wholesale (their output rows finalize to zero).
 
 Masking contract (identical to the gather path):
   * entries with ``pos < 0`` are invalid (unwritten / scrubbed / padding);
   * logical blocks mapped to the reserved trash block 0 are invalid
     wholesale, whatever garbage block 0's pos plane holds;
-  * causal: ``pos <= q_pos[slot]``; window: ``pos > q_pos[slot] - window``.
+  * causal: ``pos <= q_pos[slot] + i`` per query ``i``; window:
+    ``pos > q_pos[slot] + i - window``;
+  * queries ``i >= q_lens[slot]`` are invalid (mixed-batch padding).
 
 Two implementations behind one wrapper, both bit-identical in masking and
 accumulation order:
@@ -55,17 +65,19 @@ def mask_value(dtype) -> float:
 
 def _paged_decode_kernel(
     tables_ref,  # (B, nb) int32, SMEM scalar prefetch
-    qpos_ref,  # (B,) int32, SMEM scalar prefetch
-    q_ref,  # (1, 1, G, Dh) this slot+kv-head's query group
+    qpos_ref,  # (B,) int32, SMEM scalar prefetch: row's first query pos
+    qlens_ref,  # (B,) int32, SMEM scalar prefetch: valid queries per row
+    q_ref,  # (1, 1, Sq*G, Dh) this slot+kv-head's queries, Sq-major
     k_ref,  # (1, bs, 1, Dh) the *physical* block tables[b, j] points at
     v_ref,  # (1, bs, 1, Dh)
     pos_ref,  # (1, bs) int32 position plane of that physical block
-    o_ref,  # (1, 1, G, Dh) output, revisited across the block axis
-    m_ref,  # (G, 1) f32 scratch: running max
-    l_ref,  # (G, 1) f32 scratch: running denominator
-    acc_ref,  # (G, Dh) f32 scratch: running weighted V
+    o_ref,  # (1, 1, Sq*G, Dh) output, revisited across the block axis
+    m_ref,  # (Sq*G, 1) f32 scratch: running max
+    l_ref,  # (Sq*G, 1) f32 scratch: running denominator
+    acc_ref,  # (Sq*G, Dh) f32 scratch: running weighted V
     *,
     nb: int,
+    sq: int,
     causal: bool,
     window: Optional[int],
 ):
@@ -80,28 +92,38 @@ def _paged_decode_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     dh = q_ref.shape[-1]
-    q = q_ref[0, 0].astype(jnp.float32) * (dh ** -0.5)  # (G, Dh)
+    sg = q_ref.shape[-2]
+    g = sg // sq
+    bs = k_ref.shape[1]
+    q = q_ref[0, 0].astype(jnp.float32) * (dh ** -0.5)  # (Sq*G, Dh)
     k = k_ref[0, :, 0].astype(jnp.float32)  # (bs, Dh)
     v = v_ref[0, :, 0].astype(jnp.float32)
-    s = jax.lax.dot_general(  # (G, bs)
+    s = jax.lax.dot_general(  # (Sq*G, bs)
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
 
     pos = pos_ref[0]  # (bs,)
     qp = qpos_ref[b]
-    valid = pos >= 0
+    ql = qlens_ref[b]
+    # per-score query index: score row i*G+g' belongs to query i, whose
+    # absolute position is qp + i (TPU needs >= 2-D iota)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (sq, g, bs), 0)
+    valid = jnp.broadcast_to(pos[None, None, :] >= 0, (sq, g, bs))
     # logical blocks parked on the trash block are invalid by definition
     valid &= tables_ref[b, j] != 0
+    # queries past the row's count are padding: mask them wholesale so
+    # their output rows finalize to exact zeros
+    valid &= qi < ql
     if causal:
-        valid &= pos <= qp
+        valid &= pos[None, None, :] <= qp + qi
     if window is not None:
-        valid &= pos > qp - window
-    s = jnp.where(valid[None, :], s, neg)
+        valid &= pos[None, None, :] > qp + qi - window
+    s = jnp.where(valid.reshape(sg, bs), s, neg)
 
-    m_prev = m_ref[...]  # (G, 1)
+    m_prev = m_ref[...]  # (Sq*G, 1)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)  # (G, bs)
+    p = jnp.exp(s - m_new)  # (Sq*G, bs)
     m_ref[...] = m_new
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -115,53 +137,61 @@ def _paged_decode_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("causal", "window", "interpret"))
+    jax.jit, static_argnames=("sq", "causal", "window", "interpret"))
 def _paged_attention_pallas(q4, k_arena, v_arena, pos_arena, block_tables,
-                            q_pos, *, causal, window, interpret):
-    """q4: (B, Hkv, G, Dh) -> (B, Hkv, G, Dh) float32."""
-    b, hkv, g, dh = q4.shape
+                            q_pos, q_lens, *, sq, causal, window, interpret):
+    """q4: (B, Hkv, Sq*G, Dh) -> (B, Hkv, Sq*G, Dh) float32."""
+    b, hkv, sg, dh = q4.shape
     bs = k_arena.shape[1]
     nb = block_tables.shape[1]
     if pltpu is None:  # pragma: no cover
         raise RuntimeError("pallas TPU frontend unavailable")
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, hkv, nb),
         in_specs=[
-            pl.BlockSpec((1, 1, g, dh), lambda bi, h, j, t, qp: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, sg, dh),
+                         lambda bi, h, j, t, qp, ql: (bi, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, dh),
-                         lambda bi, h, j, t, qp: (t[bi, j], 0, h, 0)),
+                         lambda bi, h, j, t, qp, ql: (t[bi, j], 0, h, 0)),
             pl.BlockSpec((1, bs, 1, dh),
-                         lambda bi, h, j, t, qp: (t[bi, j], 0, h, 0)),
-            pl.BlockSpec((1, bs), lambda bi, h, j, t, qp: (t[bi, j], 0)),
+                         lambda bi, h, j, t, qp, ql: (t[bi, j], 0, h, 0)),
+            pl.BlockSpec((1, bs), lambda bi, h, j, t, qp, ql: (t[bi, j], 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, dh),
-                               lambda bi, h, j, t, qp: (bi, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, sg, dh),
+                               lambda bi, h, j, t, qp, ql: (bi, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((sg, 1), jnp.float32),
+            pltpu.VMEM((sg, 1), jnp.float32),
+            pltpu.VMEM((sg, dh), jnp.float32),
         ],
     )
-    kernel = functools.partial(_paged_decode_kernel, nb=nb, causal=causal,
-                               window=window)
+    kernel = functools.partial(_paged_decode_kernel, nb=nb, sq=sq,
+                               causal=causal, window=window)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, sg, dh), jnp.float32),
         interpret=interpret,
     )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(q_pos, jnp.int32),
-      q4, k_arena, v_arena, pos_arena)
+      jnp.asarray(q_lens, jnp.int32), q4, k_arena, v_arena, pos_arena)
 
 
 def _paged_attention_xla(q4, k_arena, v_arena, pos_arena, block_tables,
-                         q_pos, *, causal, window):
+                         q_pos, q_lens, *, sq, causal, window):
     """lax.scan over logical blocks: same masking and online-softmax
     accumulation as the kernel, one (B, block_size) gathered slab per step
     — the full gathered K/V is never materialized."""
-    b, hkv, g, dh = q4.shape
+    b, hkv, sg, dh = q4.shape
+    g = sg // sq
     neg = mask_value(jnp.float32)
-    qh = q4.astype(jnp.float32) * (dh ** -0.5)  # (B, Hkv, G, Dh)
+    qh = q4.astype(jnp.float32) * (dh ** -0.5)  # (B, Hkv, Sq*G, Dh)
+    qi = jnp.arange(sq, dtype=jnp.int32)  # query index within the row
+    # per-query absolute positions / validity, Sq-major like the q layout
+    qpos = (q_pos[:, None] + qi[None, :])  # (B, Sq)
+    qvalid = qi[None, :] < q_lens[:, None]  # (B, Sq)
+    qpos_sg = jnp.repeat(qpos, g, axis=1)  # (B, Sq*G)
+    qvalid_sg = jnp.repeat(qvalid, g, axis=1)
 
     def step(carry, tcol):  # tcol: (B,) physical ids of logical block j
         m, denom, acc = carry
@@ -171,10 +201,11 @@ def _paged_attention_xla(q4, k_arena, v_arena, pos_arena, block_tables,
         s = jnp.einsum("bhgd,bkhd->bhgk", qh, kj,
                        preferred_element_type=jnp.float32)
         valid = pj[:, None, None, :] >= 0
+        valid &= qvalid_sg[:, None, :, None]
         if causal:
-            valid &= pj[:, None, None, :] <= q_pos[:, None, None, None]
+            valid &= pj[:, None, None, :] <= qpos_sg[:, None, :, None]
         if window is not None:
-            valid &= pj[:, None, None, :] > (q_pos[:, None, None, None]
+            valid &= pj[:, None, None, :] > (qpos_sg[:, None, :, None]
                                              - window)
         s = jnp.where(valid, s, neg)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
@@ -185,27 +216,35 @@ def _paged_attention_xla(q4, k_arena, v_arena, pos_arena, block_tables,
             "bhgk,bkhd->bhgd", p, vj, preferred_element_type=jnp.float32)
         return (m_new, denom, acc), None
 
-    m0 = jnp.full((b, hkv, g), neg, jnp.float32)
-    l0 = jnp.zeros((b, hkv, g), jnp.float32)
-    a0 = jnp.zeros((b, hkv, g, dh), jnp.float32)
+    m0 = jnp.full((b, hkv, sg), neg, jnp.float32)
+    l0 = jnp.zeros((b, hkv, sg), jnp.float32)
+    a0 = jnp.zeros((b, hkv, sg, dh), jnp.float32)
     (_, denom, acc), _ = jax.lax.scan(
         step, (m0, l0, a0), jnp.asarray(block_tables, jnp.int32).T)
     return acc / jnp.maximum(denom[..., None], 1e-30)
 
 
+VALID_PAGED_IMPLS = ("pallas", "pallas_interpret", "xla")
+
+
 def paged_attention_decode(
-    q: jnp.ndarray,  # (B, 1, H, Dh)
+    q: jnp.ndarray,  # (B, S, H, Dh) — decode: S == 1
     k_arena: jnp.ndarray,  # (n_blocks, block_size, Hkv, Dh)
     v_arena: jnp.ndarray,
     pos_arena: jnp.ndarray,  # (n_blocks, block_size) int32, -1 invalid
     block_tables: jnp.ndarray,  # (B, nb) int32 physical ids, 0 = trash
-    q_pos: jnp.ndarray,  # (B,) int32 absolute decode positions
+    q_pos: jnp.ndarray,  # (B,) int32 first-query absolute positions
     *,
+    q_lens: Optional[jnp.ndarray] = None,  # (B,) valid queries; None => S
     causal: bool = True,
     window: Optional[int] = None,
     impl: str = "xla",
 ) -> jnp.ndarray:
-    """Single-token paged GQA decode: returns (B, 1, H, Dh) in ``q.dtype``.
+    """Paged GQA attention over the arena: returns (B, S, H, Dh) in
+    ``q.dtype``. ``S == 1`` is plain decode; ``S > 1`` is the fused mixed
+    step, where row ``b`` carries ``q_lens[b]`` real queries at absolute
+    positions ``q_pos[b] + [0, q_lens[b])`` (decode rows 1, chunk rows up
+    to S) and the padding queries' outputs are exact zeros.
 
     ``impl``: ``"pallas"`` (compiled kernel, TPU), ``"pallas_interpret"``
     (kernel body interpreted on CPU — validation only), or ``"xla"`` (the
@@ -214,21 +253,28 @@ def paged_attention_decode(
     gather path is pinned by ``tests/test_paged_attention.py``.
     """
     b, s, h, dh = q.shape
-    assert s == 1, s
     hkv = k_arena.shape[2]
     g = h // hkv
+    if q_lens is None:
+        q_lens = jnp.full((b,), s, jnp.int32)
     # head index = hkv_idx * g + g_idx: the same (hkv, g) split the gather
-    # path's full_attention uses, so outputs line up head-for-head
-    q4 = q.reshape(b, hkv, g, dh)
+    # path's full_attention uses, so outputs line up head-for-head. The
+    # query axis folds in Sq-major ((q0 heads..., q1 heads...)) so the
+    # kernel's score row i*G+g' maps back to query i of head group g'.
+    q4 = (q.reshape(b, s, hkv, g, dh).transpose(0, 2, 1, 3, 4)
+          .reshape(b, hkv, s * g, dh))
     if impl in ("pallas", "pallas_interpret"):
         out = _paged_attention_pallas(
-            q4, k_arena, v_arena, pos_arena, block_tables, q_pos,
-            causal=causal, window=window,
+            q4, k_arena, v_arena, pos_arena, block_tables, q_pos, q_lens,
+            sq=s, causal=causal, window=window,
             interpret=(impl == "pallas_interpret"))
     elif impl == "xla":
         out = _paged_attention_xla(
-            q4, k_arena, v_arena, pos_arena, block_tables, q_pos,
-            causal=causal, window=window)
+            q4, k_arena, v_arena, pos_arena, block_tables, q_pos, q_lens,
+            sq=s, causal=causal, window=window)
     else:
-        raise ValueError(f"unknown paged attention impl {impl!r}")
-    return out.reshape(b, 1, h, dh).astype(q.dtype)
+        raise ValueError(
+            f"unknown paged attention impl {impl!r}; valid impls: "
+            f"{', '.join(VALID_PAGED_IMPLS)}")
+    return (out.reshape(b, hkv, s, g, dh).transpose(0, 2, 1, 3, 4)
+            .reshape(b, s, h, dh).astype(q.dtype))

@@ -16,6 +16,7 @@ lifecycle trace as JSONL (see docs/serving.md "Observability").
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import sys
 import time
@@ -27,7 +28,8 @@ import repro.configs as C
 from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
-from repro.serve import ContinuousBatchingEngine, DecodeEngine
+from repro.serve import (ContinuousBatchingEngine, DecodeEngine,
+                         EngineConfig, SamplingParams)
 from repro.serve.metrics import format_report
 
 
@@ -65,6 +67,10 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill: at most this many prompt tokens "
                          "per engine step (continuous engine, block mode)")
+    ap.add_argument("--fused", action="store_true",
+                    help="fused mixed step: the per-step prefill chunk and "
+                         "the decode batch share ONE dispatch (requires "
+                         "--prefill-chunk)")
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--n-shifts", type=int, default=4)
     ap.add_argument("--group-size", type=int, default=4)
@@ -107,11 +113,13 @@ def main():
         sample = out[0]
     else:
         eng = ContinuousBatchingEngine(
-            cfg, params, max_len=max_len, n_slots=args.n_slots,
-            packed=args.packed, quant_cfg=qcfg,
-            prefill_chunk=args.prefill_chunk)
-        rids = [eng.submit(p, args.tokens, temperature=args.temperature,
-                           seed=i) for i, p in enumerate(prompts)]
+            cfg, params, config=EngineConfig(
+                max_len=max_len, n_slots=args.n_slots, packed=args.packed,
+                quant_cfg=qcfg, prefill_chunk=args.prefill_chunk,
+                fused_step=args.fused))
+        sp = functools.partial(SamplingParams, max_tokens=args.tokens,
+                               temperature=args.temperature)
+        rids = [eng.submit(p, sp(seed=i)) for i, p in enumerate(prompts)]
         t0 = time.perf_counter()
         results = {}
         step = 0

@@ -166,6 +166,7 @@ def attention_apply(
     block_tables: Optional[jnp.ndarray] = None,  # (B, n_blocks) physical ids
     attend_cache: bool = False,  # prefill: attend over the (prefix) cache
     paged: Optional[str] = None,  # fused paged decode kernel impl
+    q_lens: Optional[jnp.ndarray] = None,  # (B,) valid tokens per row (mixed)
 ):
     """Returns (out (B,S,D), new_cache_or_None).
 
@@ -181,6 +182,14 @@ def attention_apply(
     own K/V, which is what lets a prefill chunk see everything committed
     before it — a cached prompt prefix, previously prefilled chunks, or
     both; the kv_pos >= 0 masking contract is unchanged in all modes.
+
+    ``q_lens`` (with ``block_tables``) selects the fused mixed-step path:
+    row ``r`` carries ``q_lens[r]`` real tokens starting at its own
+    ``cache_index[r]`` (decode rows 1, chunk rows up to S, idle rows 0),
+    every row's valid K/V is scatter-committed into the arena through its
+    block table inside this same launch, and attention reads the arena
+    through the tables — one dispatch covers the decode batch and a
+    prefill chunk with zero host-side commit work afterwards.
     """
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     b, s, _ = x.shape
@@ -217,6 +226,50 @@ def attention_apply(
         kd = k.astype(cache["k"].dtype)
         vd = v.astype(cache["v"].dtype)
         new_pos = positions.astype(jnp.int32)
+        if q_lens is not None and block_tables is not None:
+            # fused mixed step: decode rows (1 valid token) and a prefill
+            # chunk's rows (up to S valid tokens) share one launch. Every
+            # row's valid tokens are written straight into the arena
+            # through its block table — invalid tokens (mixed-batch
+            # padding, idle decode rows) are routed to the trash block 0,
+            # so the commit needs no host-side scatter afterwards — and
+            # attention reads each row's K/V through its table, paged or
+            # gathered. Valid writes cannot collide: a request's write
+            # region lies in blocks it exclusively owns, and each request
+            # contributes valid tokens from exactly one row.
+            assert jnp.ndim(idx) == 1 and per_slot, (jnp.ndim(idx), per_slot)
+            nb = block_tables.shape[1]
+            pos2 = positions  # (B, S): row r writes at idx[r] + [0, S)
+            tok_valid = (jnp.arange(s, dtype=jnp.int32)[None, :]
+                         < q_lens[:, None])  # (B, S)
+            bi = jnp.clip(pos2 // cache_len, 0, nb - 1)
+            phys = jnp.where(tok_valid,
+                             jnp.take_along_axis(block_tables, bi, axis=1),
+                             0)  # (B, S); invalid tokens -> trash block
+            off = jnp.mod(pos2, cache_len)
+            fp, fo = phys.reshape(-1), off.reshape(-1)
+            ck = cache["k"].at[fp, fo].set(
+                kd.reshape((b * s,) + kd.shape[2:]))
+            cv = cache["v"].at[fp, fo].set(
+                vd.reshape((b * s,) + vd.shape[2:]))
+            cp = cache["pos"].at[fp, fo].set(
+                jnp.where(tok_valid, pos2, -1).reshape(-1))
+            if paged is not None:
+                out = paged_attention_decode(
+                    q, ck, cv, cp, block_tables, pos2[:, 0],
+                    q_lens=q_lens, causal=causal, window=window, impl=paged)
+            else:
+                gk = ck[block_tables].reshape(
+                    (b, nb * cache_len) + ck.shape[2:])
+                gv = cv[block_tables].reshape(
+                    (b, nb * cache_len) + cv.shape[2:])
+                gp = jnp.where((block_tables == 0)[:, :, None], -1,
+                               cp[block_tables]).reshape(b, nb * cache_len)
+                out = chunked_attention(
+                    q, gk, gv, q_pos=pos2, kv_pos=gp, causal=causal,
+                    window=window, chunk=cfg.attn_chunk)
+            y = dense(p["wo"], out.reshape(b, s, h * dh), cfg)
+            return y, {"k": ck, "v": cv, "pos": cp}
         if jnp.ndim(idx) == 1 and block_tables is not None:
             # block-table decode: the cache is a physical-block arena; row
             # r's token lands in block idx[r] // bs at offset idx[r] % bs

@@ -82,7 +82,7 @@ class Model:
 
     def _unit_apply(self, unit_params, x, *, positions, ctx, cache,
                     cache_index, block_tables=None, attend_cache=False,
-                    paged=None):
+                    paged=None, q_lens=None):
         new_cache = {} if cache is not None else None
         aux_sum = jnp.zeros((), jnp.float32)
         for i, kind in enumerate(self.unit):
@@ -93,7 +93,7 @@ class Model:
                 unit_params[key], x, self.cfg, kind, positions=positions,
                 ctx=ctx, cache=c, cache_index=cache_index,
                 block_tables=block_tables, attend_cache=attend_cache,
-                paged=paged)
+                paged=paged, q_lens=q_lens)
             if cache is not None:
                 new_cache[key] = nc if nc is not None else {}
             if "moe_aux" in aux:
@@ -102,7 +102,7 @@ class Model:
 
     def _stack_apply(self, params, x, *, positions, ctx=None, cache=None,
                      cache_index=None, block_tables=None,
-                     attend_cache=False, paged=None):
+                     attend_cache=False, paged=None, q_lens=None):
         cfg = self.cfg
 
         def unit_fn(x, unit_params, unit_cache):
@@ -110,7 +110,7 @@ class Model:
                 unit_params, x, positions=positions, ctx=ctx,
                 cache=unit_cache, cache_index=cache_index,
                 block_tables=block_tables, attend_cache=attend_cache,
-                paged=paged)
+                paged=paged, q_lens=q_lens)
 
         if cfg.parallel.remat == "full":
             unit_fn = jax.checkpoint(unit_fn)
@@ -166,7 +166,7 @@ class Model:
                     params["tail"][key], x, cfg, kind, positions=positions,
                     ctx=ctx, cache=c, cache_index=cache_index,
                     block_tables=block_tables, attend_cache=attend_cache,
-                    paged=paged)
+                    paged=paged, q_lens=q_lens)
                 aux_total = aux_total + aux.get("moe_aux", 0.0)
                 if cache is not None:
                     new_cache["tail"][key] = nc if nc is not None else {}
@@ -174,7 +174,8 @@ class Model:
 
     def apply(self, params, batch: Dict[str, jnp.ndarray], *, cache=None,
               cache_index=None, last_only: bool = False, last_index=None,
-              block_tables=None, attend_cache: bool = False, paged=None):
+              block_tables=None, attend_cache: bool = False, paged=None,
+              q_lens=None):
         """Forward pass. batch: tokens (B,S) [or frames], optional patches.
 
         Returns (logits (B,S,V) — or (B,1,V) when last_only — new_cache,
@@ -184,7 +185,9 @@ class Model:
         (scalar or (B,) int32) unembeds just that position per row instead
         — bucket-padded prefills select the last *real* token.
         ``block_tables`` / ``attend_cache`` thread through to the attention
-        cache paths (block-table decode / cached-prefix suffix prefill).
+        cache paths (block-table decode / cached-prefix suffix prefill);
+        ``q_lens`` ((B,) int32, with ``block_tables``) selects the fused
+        mixed chunk+decode path (see :meth:`mixed_step`).
         """
         cfg = self.cfg
         dt = jnp.dtype(cfg.compute_dtype)
@@ -208,7 +211,7 @@ class Model:
         x, new_cache, aux = self._stack_apply(
             params, x, positions=positions, ctx=ctx, cache=cache,
             cache_index=cache_index, block_tables=block_tables,
-            attend_cache=attend_cache, paged=paged)
+            attend_cache=attend_cache, paged=paged, q_lens=q_lens)
         if last_index is not None:
             b = x.shape[0]
             idx = jnp.broadcast_to(jnp.asarray(last_index, jnp.int32), (b,))
@@ -290,6 +293,28 @@ class Model:
         logits, cache, _ = self.apply(params, {"tokens": token}, cache=cache,
                                       cache_index=index,
                                       block_tables=block_tables, paged=paged)
+        return logits[:, -1], cache
+
+    def mixed_step(self, params, batch, cache, start, q_lens, last_index,
+                   block_tables, *, paged=None):
+        """One fused mixed chunk+decode step over the block arena: row
+        ``r`` of ``batch['tokens']`` ((B, S) int32) carries ``q_lens[r]``
+        real tokens starting at absolute position ``start[r]`` — decode
+        rows hold one token (their next decode position), the prefill
+        chunk's rows hold up to S prompt tokens at the group's committed
+        offset, idle rows hold none. Each row's valid K/V is
+        scatter-committed into the arena *through its block table inside
+        this same launch* (``serve/kv_cache.scatter_row`` never runs for
+        fused chunks), attention reads the arena through the tables
+        (``paged`` fuses the gather away entirely), and the returned
+        logits are each row's ``last_index`` position — one device
+        dispatch where the separate path pays a ``prefill_chunk`` launch
+        plus a ``decode_step`` launch."""
+        logits, cache, _ = self.apply(
+            params, batch, cache=cache,
+            cache_index=jnp.asarray(start, jnp.int32),
+            last_index=last_index, block_tables=block_tables,
+            paged=paged, q_lens=jnp.asarray(q_lens, jnp.int32))
         return logits[:, -1], cache
 
     # ------------------------------------------------------------------

@@ -123,6 +123,7 @@ def block_apply(
     block_tables: Optional[jnp.ndarray] = None,
     attend_cache: bool = False,
     paged: Optional[str] = None,
+    q_lens: Optional[jnp.ndarray] = None,
 ):
     """Returns (x, new_cache, aux)."""
     aux = {}
@@ -157,6 +158,7 @@ def block_apply(
         block_tables=block_tables,
         attend_cache=attend_cache,
         paged=paged,
+        q_lens=q_lens,
     )
     x = x + h
 

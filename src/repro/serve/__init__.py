@@ -1,3 +1,4 @@
+from repro.serve.config import EngineConfig, SamplingParams
 from repro.serve.engine import ContinuousBatchingEngine, DecodeEngine
 from repro.serve.kv_cache import SlotKVCache
 from repro.serve.metrics import MetricsRegistry, format_report
@@ -7,6 +8,7 @@ from repro.serve.scheduler import RequestScheduler
 from repro.serve.trace import RequestTracer, TraceWriter, read_jsonl
 
 __all__ = ["BlockPool", "ContinuousBatchingEngine", "DecodeEngine",
-           "MetricsRegistry", "RadixPrefixCache", "RequestScheduler",
-           "RequestTracer", "SlotKVCache", "TraceWriter", "format_report",
-           "pack_tree", "packed_stats", "read_jsonl"]
+           "EngineConfig", "MetricsRegistry", "RadixPrefixCache",
+           "RequestScheduler", "RequestTracer", "SamplingParams",
+           "SlotKVCache", "TraceWriter", "format_report", "pack_tree",
+           "packed_stats", "read_jsonl"]

@@ -23,6 +23,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import warnings
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -34,6 +35,7 @@ from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
 from repro.serve import trace as tr
+from repro.serve.config import EngineConfig, SamplingParams
 from repro.serve.kv_cache import SlotKVCache
 from repro.serve.metrics import MetricsRegistry
 from repro.serve.prefix_cache import BlockPool, RadixPrefixCache
@@ -91,10 +93,16 @@ def _maybe_pack(cfg: ArchConfig, params, packed: bool,
 class ContinuousBatchingEngine:
     """Step-driven serve engine: requests join mid-flight.
 
-    API: ``submit(prompt_1d, n_tokens, ...) -> rid``; ``step()`` runs one
+    API: construct with ``ContinuousBatchingEngine(cfg, params,
+    config=EngineConfig(...))``; ``submit(prompt_1d,
+    SamplingParams(max_tokens, ...)) -> rid``; ``step()`` runs one
     scheduler round (admit + prefill new slots, one batched decode step)
     and returns the requests that finished; ``drain()`` steps until idle.
-    ``generate`` is the drop-in static-batch compatibility wrapper.
+    ``generate`` is the drop-in static-batch compatibility wrapper. The
+    pre-:class:`EngineConfig` loose-kwarg construction and the positional
+    ``submit(prompt, n_tokens, temperature=..., seed=...)`` signature
+    still work for one release behind ``DeprecationWarning`` shims
+    (docs/serving.md has the migration table).
 
     With ``prefix_cache=True`` (default, for families whose caches are
     uniform attention ring buffers) the KV cache is a physical-block arena
@@ -122,30 +130,57 @@ class ContinuousBatchingEngine:
     gathered arena view every step (``paged_impl`` overrides the backend
     auto-pick — ``"pallas"`` on TPU, ``"xla"`` scan fallback elsewhere).
     Token-exact vs the gather path; see ``docs/serving.md``.
+
+    With ``fused_step=True`` (requires ``prefill_chunk``) a step that
+    services a chunk-prefill group issues ONE ``mixed_step`` dispatch
+    covering the whole decode batch *and* the chunk: the chunk's rows are
+    concatenated after the per-slot decode rows, every row routes through
+    its own block table with a per-row valid-token count, and the chunk's
+    K/V commits into the arena inside the same launch — the separate
+    chunk-then-decode sequencing (two dispatches plus a host-side block
+    commit) remains the token-exact parity reference when off.
     """
 
-    def __init__(self, cfg: ArchConfig, params: Any, max_len: int = 256,
-                 n_slots: int = 4, packed: bool = False,
-                 quant_cfg: Optional[QuantConfig] = None,
-                 cache_dtype: Any = jnp.float32,
-                 prefix_cache: bool = True, block_size: int = 8,
-                 n_cache_blocks: Optional[int] = None,
-                 bucket_prompts: bool = True,
-                 prefill_chunk: Optional[int] = None,
-                 prefill_backlog: int = 2,
-                 use_paged_kernel: bool = False,
-                 paged_impl: Optional[str] = None,
-                 enable_metrics: bool = True,
-                 trace_capacity: int = 65536):
+    def __init__(self, cfg: ArchConfig, params: Any,
+                 config: Optional[EngineConfig] = None, **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    "loose kwargs, not both")
+            known = {f.name for f in dataclasses.fields(EngineConfig)}
+            unknown = set(legacy) - known
+            if unknown:
+                raise TypeError(
+                    f"unknown engine kwargs {sorted(unknown)}; valid "
+                    f"EngineConfig fields: {sorted(known)}")
+            warnings.warn(
+                "ContinuousBatchingEngine(cfg, params, max_len=..., ...) "
+                "loose kwargs are deprecated; pass "
+                "config=EngineConfig(...) instead", DeprecationWarning,
+                stacklevel=2)
+            config = EngineConfig(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        elif not isinstance(config, EngineConfig):
+            raise TypeError(
+                f"config must be an EngineConfig, got "
+                f"{type(config).__name__} (legacy positional max_len is "
+                f"not supported here — pass EngineConfig(max_len=...))")
+        self.config = config
         self.cfg, self.params, self.pack_stats = _maybe_pack(
-            cfg, params, packed, quant_cfg)
+            cfg, params, config.packed, config.quant_cfg)
+        max_len = config.max_len
+        n_slots = config.n_slots
+        prefill_chunk = config.prefill_chunk
+        enable_metrics = config.enable_metrics
         # observability substrate (docs/serving.md "Observability"):
         # phase timers + counters in the registry, per-request lifecycle
         # events in the tracer, all surfaced through engine.metrics().
         # enable_metrics=False swaps in no-op instruments — the hot path
         # pays one attribute check per phase.
         self.metrics_registry = MetricsRegistry(enabled=enable_metrics)
-        self.tracer = RequestTracer(capacity=trace_capacity,
+        self.tracer = RequestTracer(capacity=config.trace_capacity,
                                     enabled=enable_metrics)
         self.max_len = max_len
         self.n_slots = n_slots
@@ -155,23 +190,25 @@ class ContinuousBatchingEngine:
         # tokens' cache writes are masked out by pos. Stateful caches
         # (mamba/rec) would absorb the pads into their recurrent state and
         # a window-truncated ring could roll real KV out in their favor.
-        self.bucket_prompts = bucket_prompts and uniform
+        self.bucket_prompts = config.bucket_prompts and uniform
         self.scheduler = RequestScheduler(n_slots)
-        if prefix_cache and uniform:
-            bps = -(-max_len // block_size)
-            extra = 2 * bps if n_cache_blocks is None else n_cache_blocks
+        if config.prefix_cache and uniform:
+            bps = -(-max_len // config.block_size)
+            extra = (2 * bps if config.n_cache_blocks is None
+                     else config.n_cache_blocks)
             n_blocks = n_slots * bps + extra + 1  # +1: trash block
             self.cache = SlotKVCache(self.model, n_slots, max_len,
-                                     cache_dtype, block_size=block_size,
+                                     config.cache_dtype,
+                                     block_size=config.block_size,
                                      n_blocks=n_blocks)
             self.prefix_cache: Optional[RadixPrefixCache] = RadixPrefixCache(
-                BlockPool(n_blocks, block_size))
+                BlockPool(n_blocks, config.block_size))
             self._wire_scheduler()
             self._slot_meta: Dict[int, dict] = {}
         else:
             # recurrent / window-truncated caches: contiguous per-slot rows
             self.cache = SlotKVCache(self.model, n_slots, max_len,
-                                     cache_dtype)
+                                     config.cache_dtype)
             self.prefix_cache = None
         if prefill_chunk is not None:
             if self.prefix_cache is None:
@@ -183,7 +220,8 @@ class ContinuousBatchingEngine:
             bs = self.cache.block_size
             prefill_chunk = max(bs, -(-prefill_chunk // bs) * bs)
         self.prefill_chunk = prefill_chunk
-        self.prefill_backlog = max(1, prefill_backlog)
+        self.prefill_backlog = config.prefill_backlog
+        self.fused_step = config.fused_step
         self._prefill_groups: collections.deque = collections.deque()
         # fused paged-attention decode: indexes the KV arena through the
         # block tables *inside* the attention kernel, so the per-step
@@ -191,12 +229,12 @@ class ContinuousBatchingEngine:
         # "pallas" is the TPU kernel; "xla" is the scan fallback with the
         # same masking/accumulation contract for backends without Pallas
         # compile support; "pallas_interpret" exists for validation.
-        if use_paged_kernel and self.prefix_cache is None:
+        if config.use_paged_kernel and self.prefix_cache is None:
             raise ValueError(
                 "use_paged_kernel requires the block-mode prefix cache "
                 "(uniform attention caches with prefix_cache=True)")
-        if use_paged_kernel:
-            self.paged_impl = paged_impl or (
+        if config.use_paged_kernel:
+            self.paged_impl = config.paged_impl or (
                 "pallas" if jax.default_backend() == "tpu" else "xla")
         else:
             self.paged_impl = None
@@ -205,6 +243,9 @@ class ContinuousBatchingEngine:
         self._decode = jax.jit(
             functools.partial(self.model.decode_step, paged=self.paged_impl),
             donate_argnums=(2,))
+        self._mixed = jax.jit(
+            functools.partial(self.model.mixed_step, paged=self.paged_impl),
+            donate_argnums=(2,))
         self._dummy_key = jax.random.key(0)
         self._stat_prefill_tokens = 0
         self._stat_saved_tokens = 0
@@ -212,39 +253,79 @@ class ContinuousBatchingEngine:
 
     # -- request API ----------------------------------------------------
 
-    def submit(self, prompt, n_tokens: int, temperature: float = 0.0,
+    def submit(self, prompt, params: Optional[SamplingParams] = None,
+               n_tokens: Optional[int] = None, temperature: float = 0.0,
                key=None, seed: Optional[int] = None, extra=None) -> int:
-        """``seed`` (or an explicit ``key``) makes a request's sampling
-        reproducible. When neither is given, each request gets a distinct
-        auto-key — independent clients must not draw identical streams."""
+        """Enqueue a request: ``submit(prompt, SamplingParams(max_tokens,
+        temperature=..., seed=...), extra=...)``. ``seed`` (or an explicit
+        ``key``) makes the request's sampling reproducible; when neither
+        is given, each request gets a distinct auto-key — independent
+        clients must not draw identical streams. The legacy positional
+        signature ``submit(prompt, n_tokens, temperature=..., key=...,
+        seed=...)`` still works behind a ``DeprecationWarning``."""
+        if isinstance(params, SamplingParams):
+            if (n_tokens is not None or temperature or key is not None
+                    or seed is not None):
+                raise TypeError(
+                    "legacy sampling kwargs (n_tokens/temperature/key/"
+                    "seed) cannot be combined with SamplingParams")
+        else:
+            if isinstance(params, (int, np.integer)):
+                if n_tokens is not None:
+                    raise TypeError(
+                        "got both a positional token budget and n_tokens")
+                n_tokens = int(params)
+            elif params is not None:
+                raise TypeError(
+                    f"submit() expects SamplingParams, got "
+                    f"{type(params).__name__}")
+            if n_tokens is None:
+                raise TypeError(
+                    "submit() needs a SamplingParams (or the deprecated "
+                    "n_tokens kwarg)")
+            warnings.warn(
+                "submit(prompt, n_tokens, temperature=..., key=..., "
+                "seed=...) is deprecated; pass "
+                "submit(prompt, SamplingParams(max_tokens, ...))",
+                DeprecationWarning, stacklevel=2)
+            params = SamplingParams(
+                max_tokens=int(n_tokens), temperature=temperature,
+                seed=seed if key is None else None,
+                key=key)
+        return self._submit(prompt, params, extra)
+
+    def _submit(self, prompt, sp: SamplingParams, extra=None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if n_tokens < 0:
-            raise ValueError(f"n_tokens must be >= 0, got {n_tokens}")
-        if prompt.size + n_tokens > self.max_len:
+        if prompt.size + sp.max_tokens > self.max_len:
             raise ValueError(
-                f"prompt ({prompt.size}) + n_tokens ({n_tokens}) exceeds "
-                f"max_len ({self.max_len})")
+                f"prompt ({prompt.size}) + max_tokens ({sp.max_tokens}) "
+                f"exceeds max_len ({self.max_len})")
+        key = sp.key
         if key is None:
-            if seed is not None:
-                key = jax.random.key(seed)
+            if sp.seed is not None:
+                key = jax.random.key(sp.seed)
             else:
                 key = jax.random.fold_in(self._dummy_key,
                                          self.scheduler.next_rid())
-        rid = self.scheduler.submit(prompt, n_tokens, temperature, key,
-                                    extra)
+        rid = self.scheduler.submit(prompt, sp.max_tokens, sp.temperature,
+                                    key, extra)
         self.tracer.event(tr.SUBMIT, rid, prompt_len=int(prompt.size),
-                          n_tokens=int(n_tokens))
+                          n_tokens=int(sp.max_tokens))
         return rid
 
     def step(self) -> List[Finished]:
         """One scheduler round: admit queued requests (unless the chunked
         backlog is full), run at most one chunk of prefill work, then one
-        batched decode step over the DECODING slots.
+        batched decode step over the DECODING slots. With ``fused_step``
+        the chunk and the decode batch ride ONE ``mixed_step`` dispatch
+        (``step.mixed_dispatch_s``) instead of two sequenced launches.
 
         Phase timers (``step.*_s`` histograms in ``metrics_registry``):
         admit, prefix_match, prefill_dispatch, chunk_advance,
-        decode_dispatch, device_sync, sample_host — plus ``step.total_s``
-        for the whole round."""
+        mixed_dispatch, decode_dispatch, device_sync, sample_host — plus
+        ``step.total_s`` for the whole round. ``step.model_dispatches``
+        counts forward launches (the fused win the dispatch-count test and
+        the mixed_load bench gate measure)."""
         m = self.metrics_registry
         with m.timer("step.total_s"):
             if len(self._prefill_groups) < self.prefill_backlog:
@@ -254,10 +335,16 @@ class ContinuousBatchingEngine:
                     for slot, st in admitted:
                         self.tracer.event(tr.ADMIT, st.req.rid, slot=slot)
                     self._prefill_admitted(admitted)
+            decoded = False
             if self._prefill_groups:
-                with m.timer("step.chunk_advance_s"):
-                    self._advance_chunk()
-            if self.scheduler.needs_decode():
+                if self._prefill_groups[0].get("fused"):
+                    # one dispatch services the chunk AND the decode batch
+                    self._mixed_once()
+                    decoded = True
+                else:
+                    with m.timer("step.chunk_advance_s"):
+                        self._advance_chunk()
+            if not decoded and self.scheduler.needs_decode():
                 self._decode_once()
             finished = self.scheduler.pop_finished()
         for f in finished:
@@ -292,9 +379,11 @@ class ContinuousBatchingEngine:
         for r in range(b):
             ex = ({k: np.asarray(v)[r] for k, v in extra.items()}
                   if extra else None)
-            rids.append(self.submit(
-                prompt[r], n_tokens, temperature=temperature,
-                key=jax.random.fold_in(rng, r), extra=ex))
+            rids.append(self._submit(
+                prompt[r],
+                SamplingParams(max_tokens=n_tokens, temperature=temperature,
+                               key=jax.random.fold_in(rng, r)),
+                extra=ex))
         out = self.drain()
         return np.stack([out[rid] for rid in rids])
 
@@ -515,6 +604,7 @@ class ContinuousBatchingEngine:
                         np.stack([ex[k] for ex in extras]))
             last_idx = jnp.asarray(lasts)
             self._stat_prefill_tokens += int(lasts.sum()) + g
+            self.metrics_registry.counter("step.model_dispatches").inc()
             if self.prefix_cache is not None:
                 meta = [self._slot_meta[slot] for slot, _ in group]
                 cache = self.cache.prefix_tree(
@@ -571,17 +661,9 @@ class ContinuousBatchingEngine:
                                 p_len + (n_chunks - 1) * chunk)
             groups.setdefault((p_len, n_chunks, tail, sig),
                               []).append((slot, st))
-        for (p_len, n_chunks, tail, _), members in groups.items():
+        for (p_len, n_chunks, tail, sig), members in groups.items():
             g = len(members)
             s_pad = (n_chunks - 1) * chunk + tail
-            # the working tree only needs committed + padded-suffix rows,
-            # not the slot's full capacity — chunk attention stays O(chunk
-            # * committed) instead of O(chunk * eff_len). Rounded up to a
-            # pow2 (then a block multiple) so distinct prefix-hit lengths
-            # share jit cache entries instead of compiling per p_len.
-            need = p_len + s_pad
-            length = -(-(1 << max(need - 1, 0).bit_length()) // bs) * bs
-            length = min(self.cache.eff_len, max(length, bs))
             toks = np.zeros((g, s_pad), np.int32)
             lasts = np.empty(g, np.int32)
             metas = []
@@ -597,13 +679,33 @@ class ContinuousBatchingEngine:
             # scattering the whole fresh working tree instead)
             self.cache.invalidate_blocks(
                 [b for m in metas for b in m["owned"]])
-            tree = self.cache.prefix_tree([m["matched"] for m in metas],
-                                          p_len, length=length)
-            self._prefill_groups.append({
+            grp = {
                 "members": members, "metas": metas, "toks": toks,
                 "lasts": lasts, "p_len": p_len, "n_chunks": n_chunks,
-                "tail": tail, "done": 0, "tree": tree,
-                "extra": [st.req.extra for _, st in members]})
+                "tail": tail, "done": 0, "tree": None,
+                "extra": [st.req.extra for _, st in members]}
+            if self.fused_step and sig is None:
+                # fused groups need no working tree at all: each chunk
+                # commits straight into the arena through the group's
+                # per-row block tables inside the mixed launch (extra-input
+                # groups fall back to the separate path — mixed batches
+                # carry no per-row side inputs)
+                grp["fused"] = True
+                grp["tables"] = self.cache.group_tables(
+                    [m["matched"] + m["owned"] for m in metas])
+            else:
+                # the working tree only needs committed + padded-suffix
+                # rows, not the slot's full capacity — chunk attention
+                # stays O(chunk * committed) instead of O(chunk *
+                # eff_len). Rounded up to a pow2 (then a block multiple)
+                # so distinct prefix-hit lengths share jit cache entries
+                # instead of compiling per p_len.
+                need = p_len + s_pad
+                length = -(-(1 << max(need - 1, 0).bit_length()) // bs) * bs
+                length = min(self.cache.eff_len, max(length, bs))
+                grp["tree"] = self.cache.prefix_tree(
+                    [m["matched"] for m in metas], p_len, length=length)
+            self._prefill_groups.append(grp)
 
     def _advance_chunk(self) -> None:
         """Run one chunk of prefill for the head group, round-robin across
@@ -630,6 +732,7 @@ class ContinuousBatchingEngine:
                     else jnp.full((g,), s_chunk - 1, jnp.int32))
         committed = grp["p_len"] + lo
         self._stat_chunk_steps += 1
+        self.metrics_registry.counter("step.model_dispatches").inc()
         if committed == 0:
             # first chunk of an uncached prompt: nothing committed, the
             # chunk attends over its own K/V like a whole-prompt prefill
@@ -672,6 +775,88 @@ class ContinuousBatchingEngine:
             self.tracer.event(tr.FIRST_TOKEN, st.req.rid, slot=slot)
             self.scheduler.record_prefill(slot, tok)
 
+    def _mixed_once(self) -> None:
+        """Service the head fused chunk group AND the whole decode batch
+        in ONE ``mixed_step`` dispatch. Batch layout: rows [0, n_slots)
+        are the per-slot decode rows (token in column 0, ``q_lens`` 1 for
+        DECODING slots, 0 for free/PREFILLING slots — their rows are
+        fully masked no-ops), rows [n_slots, n_slots + g) are the chunk
+        group's rows (``q_lens`` = real tokens this chunk, block tables =
+        matched prefix + owned blocks). Every row commits its valid K/V
+        through its own table inside the launch, so the host-side
+        ``scatter_row`` of the separate path never runs; invalid tokens
+        route to the trash block. Per-request token streams are identical
+        to the separate path — a slot whose final chunk lands this step
+        simply joins the decode batch next step, same as before."""
+        m = self.metrics_registry
+        grp = self._prefill_groups[0]
+        chunk = self.prefill_chunk
+        k = grp["done"]
+        final = k == grp["n_chunks"] - 1
+        s_chunk = grp["tail"] if final else chunk
+        lo = k * chunk
+        g = len(grp["members"])
+        n = self.n_slots
+        toks, idxs, steps, temps, keys = self.scheduler.decode_batch(
+            self._dummy_key)
+        decoding = self.scheduler.decoding_slots()
+        live = [(s, self.scheduler.slots[s].req.rid, int(steps[s]))
+                for s in decoding] if self.tracer.enabled else []
+        btoks = np.zeros((n + g, s_chunk), np.int32)
+        btoks[:n, 0] = toks
+        btoks[n:] = grp["toks"][:, lo:lo + s_chunk]
+        q_lens = np.zeros(n + g, np.int32)
+        q_lens[decoding] = 1
+        start = np.zeros(n + g, np.int32)
+        start[:n] = idxs
+        start[n:] = grp["p_len"] + lo
+        last_idx = np.zeros(n + g, np.int32)
+        last_idx[n:] = grp["lasts"] if final else s_chunk - 1
+        n_valids = []
+        for i, (slot, st) in enumerate(grp["members"]):
+            nv = min(len(st.req.prompt) - grp["p_len"] - lo, s_chunk)
+            n_valids.append(nv)
+            q_lens[n + i] = nv
+        tables = np.concatenate([self.cache.block_tables, grp["tables"]])
+        self._stat_chunk_steps += 1
+        m.counter("step.model_dispatches").inc()
+        with m.timer("step.mixed_dispatch_s"):
+            logits, tree = self._mixed(
+                self.params, {"tokens": jnp.asarray(btoks)},
+                self.cache.tree, jnp.asarray(start), jnp.asarray(q_lens),
+                jnp.asarray(last_idx), jnp.asarray(tables))
+            self.cache.tree = tree
+        if m.enabled:
+            with m.timer("step.device_sync_s"):
+                jax.block_until_ready(logits)
+        all_keys = list(keys) + [st.req.key for _, st in grp["members"]]
+        all_steps = np.concatenate([steps, np.zeros(g, np.int32)])
+        all_temps = np.concatenate(
+            [temps, np.asarray([st.req.temperature
+                                for _, st in grp["members"]], np.float32)])
+        with m.timer("step.sample_host_s"):
+            nxt = np.asarray(sample_step(
+                logits, jnp.stack(all_keys), jnp.asarray(all_steps),
+                jnp.asarray(all_temps)))
+            self.scheduler.record_decode(nxt[:n])
+        for slot, rid, step in live:
+            self.tracer.event(tr.DECODE_STEP, rid, slot=slot, step=step)
+        grp["done"] = k + 1
+        for i, (slot, st) in enumerate(grp["members"]):
+            self.tracer.event(tr.PREFILL_CHUNK, st.req.rid, slot=slot,
+                              index=k, n_chunks=grp["n_chunks"],
+                              tokens=int(n_valids[i]))
+        if not final:
+            self._prefill_groups.rotate(-1)
+            return
+        self._prefill_groups.popleft()
+        for i, (slot, st) in enumerate(grp["members"]):
+            meta = grp["metas"][i]
+            self.cache.set_table(slot, meta["matched"] + meta["owned"])
+            self._stat_prefill_tokens += len(st.req.prompt) - grp["p_len"]
+            self.tracer.event(tr.FIRST_TOKEN, st.req.rid, slot=slot)
+            self.scheduler.record_prefill(slot, int(nxt[n + i]))
+
     def _decode_once(self) -> None:
         m = self.metrics_registry
         toks, idxs, steps, temps, keys = self.scheduler.decode_batch(
@@ -679,8 +864,9 @@ class ContinuousBatchingEngine:
         # (slot, rid, step) of the live rows — captured before
         # record_decode frees finished slots
         live = [(s, self.scheduler.slots[s].req.rid, int(steps[s]))
-                for s in self.scheduler._decoding] if self.tracer.enabled \
-            else []
+                for s in self.scheduler.decoding_slots()] \
+            if self.tracer.enabled else []
+        m.counter("step.model_dispatches").inc()
         with m.timer("step.decode_dispatch_s"):
             if self.prefix_cache is not None:
                 logits, tree = self._decode(

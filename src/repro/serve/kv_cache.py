@@ -174,6 +174,19 @@ class SlotKVCache:
         self.block_tables[slot] = 0
         self._tables_dev = None
 
+    def group_tables(self, block_lists: Sequence[Sequence[int]]) -> np.ndarray:
+        """Per-row block tables for rows that are NOT live slots — the
+        fused mixed step's chunk rows route their in-launch commits and
+        reads through these while the slot's own table stays parked on the
+        trash block until the final chunk lands. Rows are padded with the
+        trash block 0 (same "0 means invalid" contract as ``set_table``)."""
+        tables = np.zeros((len(block_lists), self.blocks_per_slot), np.int32)
+        for i, blocks in enumerate(block_lists):
+            assert not any(b == 0 for b in blocks), \
+                f"group table maps to reserved trash block 0: {blocks}"
+            tables[i, :len(blocks)] = blocks
+        return tables
+
     def invalidate_blocks(self, block_ids: Sequence[int]) -> None:
         """Set the pos plane of physical ``block_ids`` to -1 (K/V left as
         garbage — masked by pos). Freshly allocated blocks may hold stale

@@ -202,6 +202,13 @@ class RequestScheduler:
             keys[slot] = st.req.key
         return toks, idxs, steps, temps, keys
 
+    def decoding_slots(self) -> List[int]:
+        """Slots the last ``decode_batch`` marked live — the rows whose
+        sampled tokens ``record_decode`` will consume (the engine reads
+        this to trace per-slot decode events and to build the fused mixed
+        batch's per-row query counts)."""
+        return list(self._decoding)
+
     def record_decode(self, toks: np.ndarray) -> None:
         for slot in self._decoding:
             st = self.slots[slot]

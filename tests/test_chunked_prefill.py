@@ -12,7 +12,8 @@ import pytest
 import repro.configs as C
 from repro.models import params as pp
 from repro.models.model import Model
-from repro.serve import ContinuousBatchingEngine
+from repro.serve import (ContinuousBatchingEngine, EngineConfig,
+                         SamplingParams)
 from repro.serve.scheduler import DECODING, PREFILLING
 
 MAX_LEN = 96
@@ -35,8 +36,8 @@ def _engine(prefill_chunk=None, **kw):
     cfg, params = _setup()
     kw.setdefault("max_len", MAX_LEN)
     kw.setdefault("n_slots", 3)
-    return ContinuousBatchingEngine(cfg, params, prefill_chunk=prefill_chunk,
-                                    **kw)
+    return ContinuousBatchingEngine(
+        cfg, params, config=EngineConfig(prefill_chunk=prefill_chunk, **kw))
 
 
 @pytest.mark.parametrize("temperature", [0.0, 0.8])
@@ -49,7 +50,8 @@ def test_chunked_matches_unchunked(rng, temperature):
 
     def run(chunk):
         eng = _engine(chunk)
-        rids = [eng.submit(p, 8, temperature=temperature, seed=i)
+        rids = [eng.submit(p, SamplingParams(max_tokens=8,
+                                             temperature=temperature, seed=i))
                 for i, p in enumerate(prompts)]
         out = eng.drain()
         return [out[r] for r in rids]
@@ -68,15 +70,20 @@ def test_chunked_staggered_matches_unchunked_lockstep(rng, temperature):
     def run(chunk, stagger):
         eng = _engine(chunk, n_slots=2)
         out = {}
-        ra = eng.submit(pa, 8, temperature=temperature, seed=1)
+        ra = eng.submit(pa, SamplingParams(max_tokens=8,
+                                           temperature=temperature, seed=1))
         rb = None
         if not stagger:
-            rb = eng.submit(pb, 6, temperature=temperature, seed=2)
+            rb = eng.submit(pb, SamplingParams(max_tokens=6,
+                                               temperature=temperature,
+                    seed=2))
         for _ in range(2):  # A is mid-prefill (chunked) or decoding
             for f in eng.step():
                 out[f.rid] = f.tokens
         if stagger:
-            rb = eng.submit(pb, 6, temperature=temperature, seed=2)
+            rb = eng.submit(pb, SamplingParams(max_tokens=6,
+                                               temperature=temperature,
+                    seed=2))
         for rid, full in eng.drain().items():
             s0 = len(pa) if rid == ra else len(pb)
             out[rid] = full[s0:]
@@ -100,7 +107,7 @@ def test_chunk_boundaries_cross_prefix_cache_hits(rng):
     eng = _engine(CHUNK, n_slots=2)
     outs = []
     for i, p in enumerate(prompts):
-        rid = eng.submit(p, 6, seed=i)
+        rid = eng.submit(p, SamplingParams(max_tokens=6, seed=i))
         outs.append(eng.drain()[rid])  # drain so the first commits blocks
     stats = eng.prefix_stats()
     assert stats["hit_rate"] > 0
@@ -108,7 +115,7 @@ def test_chunk_boundaries_cross_prefix_cache_hits(rng):
 
     ref = _engine(None, n_slots=2, prefix_cache=False)
     for i, (p, got) in enumerate(zip(prompts, outs)):
-        rid = ref.submit(p, 6, seed=i)
+        rid = ref.submit(p, SamplingParams(max_tokens=6, seed=i))
         np.testing.assert_array_equal(got, ref.drain()[rid])
 
 
@@ -116,11 +123,12 @@ def test_decode_continues_while_long_prompt_prefills(rng):
     """The point of chunked prefill: a decoding slot keeps producing one
     token per step on every step the long prompt spends in PREFILLING."""
     eng = _engine(CHUNK, n_slots=2)
-    rs = eng.submit(_prompt(rng, 6), 40, seed=3)
+    rs = eng.submit(_prompt(rng, 6), SamplingParams(max_tokens=40, seed=3))
     eng.step()
     slot_short = next(s for s, st in enumerate(eng.scheduler.slots)
                       if st is not None and st.req.rid == rs)
-    rl = eng.submit(_prompt(rng, 80), 4, seed=4)  # 5 chunks of 16
+    rl = eng.submit(_prompt(rng, 80), SamplingParams(max_tokens=4,
+                                                     seed=4))  # 5 chunks of 16
 
     phases, gens = [], []
     for _ in range(8):
@@ -145,7 +153,7 @@ def test_prefilling_slots_invisible_to_decode(rng):
     its block table still points at the trash block (decode dummy rows
     must not write into live blocks)."""
     eng = _engine(CHUNK, n_slots=2)
-    rid = eng.submit(_prompt(rng, 80), 4, seed=0)
+    rid = eng.submit(_prompt(rng, 80), SamplingParams(max_tokens=4, seed=0))
     eng.step()
     (slot, st), = [(s, st) for s, st in enumerate(eng.scheduler.slots)
                    if st is not None]
@@ -159,14 +167,16 @@ def test_prefilling_slots_invisible_to_decode(rng):
 def test_chunk_requires_block_mode(rng):
     cfg, params = _setup()
     with pytest.raises(ValueError, match="prefill_chunk"):
-        ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
-                                 prefix_cache=False, prefill_chunk=CHUNK)
+        ContinuousBatchingEngine(cfg, params,
+                                 config=EngineConfig(max_len=MAX_LEN,
+                                                     n_slots=2,
+                prefix_cache=False, prefill_chunk=CHUNK))
 
 
 def test_chunk_rounds_up_to_block_multiple(rng):
     eng = _engine(prefill_chunk=9, block_size=8)
     assert eng.prefill_chunk == 16
-    rid = eng.submit(_prompt(rng, 40), 4, seed=0)
+    rid = eng.submit(_prompt(rng, 40), SamplingParams(max_tokens=4, seed=0))
     out = eng.drain()
     assert out[rid].shape == (44,)
 
@@ -176,10 +186,10 @@ def test_reset_reuses_engine(rng):
     reproduce the same tokens, and prefix stats start from zero."""
     eng = _engine(CHUNK, n_slots=2)
     p = _prompt(rng, 40)
-    r0 = eng.submit(p, 6, seed=0)
+    r0 = eng.submit(p, SamplingParams(max_tokens=6, seed=0))
     first = eng.drain()[r0]
     assert eng.prefix_stats()["prefill_tokens"] > 0
     eng.reset()
     assert eng.prefix_stats()["prefill_tokens"] == 0
-    r1 = eng.submit(p, 6, seed=0)
+    r1 = eng.submit(p, SamplingParams(max_tokens=6, seed=0))
     np.testing.assert_array_equal(eng.drain()[r1], first)

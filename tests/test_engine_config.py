@@ -1,0 +1,187 @@
+"""EngineConfig / SamplingParams: eager validation at construction (the
+typed API's reason to exist — misconfiguration fails with an actionable
+message before any model work, not steps deep into serving) and the
+legacy loose-kwarg shims (deprecated but working, one release)."""
+import dataclasses
+import functools
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import (ContinuousBatchingEngine, EngineConfig,
+                         SamplingParams)
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    cfg = C.get_smoke("smollm-135m").replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    return cfg, params
+
+
+# -- EngineConfig validation -------------------------------------------
+
+@pytest.mark.parametrize("field", ["max_len", "n_slots", "block_size",
+                                   "prefill_backlog", "trace_capacity"])
+def test_config_floors(field):
+    with pytest.raises(ValueError, match=field):
+        EngineConfig(**{field: 0})
+
+
+def test_config_prefill_chunk_floor():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineConfig(prefill_chunk=0)
+
+
+def test_config_negative_cache_blocks():
+    with pytest.raises(ValueError, match="n_cache_blocks"):
+        EngineConfig(n_cache_blocks=-1)
+
+
+def test_config_chunk_requires_prefix_cache():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineConfig(prefill_chunk=16, prefix_cache=False)
+
+
+def test_config_paged_requires_prefix_cache():
+    with pytest.raises(ValueError, match="use_paged_kernel"):
+        EngineConfig(use_paged_kernel=True, prefix_cache=False)
+
+
+def test_config_fused_requires_chunk():
+    with pytest.raises(ValueError, match="fused_step"):
+        EngineConfig(fused_step=True)
+
+
+def test_config_unknown_paged_impl_fails_eagerly():
+    """The headline fix: a typo'd impl used to sail through construction
+    and explode inside the first jitted decode step. Now it fails at
+    EngineConfig() time and the message lists the valid impls."""
+    with pytest.raises(ValueError) as exc:
+        EngineConfig(use_paged_kernel=True, paged_impl="palas")
+    msg = str(exc.value)
+    for valid in ("pallas", "pallas_interpret", "xla"):
+        assert valid in msg
+
+
+def test_config_paged_impl_without_kernel():
+    with pytest.raises(ValueError, match="use_paged_kernel"):
+        EngineConfig(paged_impl="xla")
+
+
+def test_config_frozen():
+    cfg = EngineConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.max_len = 512
+
+
+def test_config_valid_combinations_construct():
+    EngineConfig(prefill_chunk=16, fused_step=True)
+    EngineConfig(use_paged_kernel=True, paged_impl="pallas_interpret")
+    EngineConfig(prefix_cache=False)
+
+
+# -- SamplingParams validation -----------------------------------------
+
+def test_sampling_negative_budget():
+    with pytest.raises(ValueError, match="max_tokens"):
+        SamplingParams(max_tokens=-1)
+
+
+def test_sampling_zero_budget_allowed():
+    assert SamplingParams(max_tokens=0).max_tokens == 0
+
+
+def test_sampling_negative_temperature():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(max_tokens=4, temperature=-0.1)
+
+
+def test_sampling_seed_key_exclusive():
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        SamplingParams(max_tokens=4, seed=0, key=jax.random.key(0))
+
+
+# -- engine construction shims -----------------------------------------
+
+def test_legacy_kwargs_warn_and_work(rng):
+    cfg, params = _setup()
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        eng = ContinuousBatchingEngine(cfg, params, max_len=32, n_slots=2)
+    assert eng.max_len == 32 and eng.n_slots == 2
+    assert eng.config == EngineConfig(max_len=32, n_slots=2)
+
+
+def test_config_and_legacy_kwargs_conflict():
+    cfg, params = _setup()
+    with pytest.raises(TypeError, match="not both"):
+        ContinuousBatchingEngine(cfg, params, config=EngineConfig(),
+                                 max_len=32)
+
+
+def test_unknown_legacy_kwarg_lists_fields():
+    cfg, params = _setup()
+    with pytest.raises(TypeError) as exc:
+        ContinuousBatchingEngine(cfg, params, maxlen=32)
+    msg = str(exc.value)
+    assert "maxlen" in msg and "max_len" in msg
+
+
+def test_legacy_kwargs_still_validated():
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="fused_step"), \
+            warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ContinuousBatchingEngine(cfg, params, fused_step=True)
+
+
+def test_non_config_positional_rejected():
+    cfg, params = _setup()
+    with pytest.raises(TypeError, match="EngineConfig"):
+        ContinuousBatchingEngine(cfg, params, config=32)
+
+
+# -- submit shims ------------------------------------------------------
+
+def _engine():
+    cfg, params = _setup()
+    return ContinuousBatchingEngine(cfg, params,
+                                    config=EngineConfig(max_len=32,
+                                                        n_slots=2))
+
+
+def test_submit_legacy_matches_params(rng):
+    cfg, _ = _setup()
+    p = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    eng = _engine()
+    r0 = eng.submit(p, SamplingParams(max_tokens=4, seed=7))
+    with pytest.warns(DeprecationWarning, match="SamplingParams"):
+        r1 = eng.submit(p, 4, seed=7)
+    out = eng.drain()
+    np.testing.assert_array_equal(out[r0], out[r1])
+
+
+def test_submit_params_plus_legacy_kwargs_conflict(rng):
+    cfg, _ = _setup()
+    p = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    with pytest.raises(TypeError, match="cannot be combined"):
+        _engine().submit(p, SamplingParams(max_tokens=4), seed=1)
+
+
+def test_submit_requires_budget(rng):
+    cfg, _ = _setup()
+    p = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    with pytest.raises(TypeError, match="SamplingParams"):
+        _engine().submit(p)
+
+
+def test_submit_rejects_wrong_params_type(rng):
+    cfg, _ = _setup()
+    p = rng.integers(0, cfg.vocab, 6).astype(np.int32)
+    with pytest.raises(TypeError, match="SamplingParams"):
+        _engine().submit(p, "four")

@@ -18,7 +18,8 @@ from repro.kernels.paged_attention import mask_value, paged_attention_decode
 from repro.models import params as pp
 from repro.models.attention import full_attention
 from repro.models.model import Model
-from repro.serve import ContinuousBatchingEngine
+from repro.serve import (ContinuousBatchingEngine, EngineConfig,
+                         SamplingParams)
 
 MAX_LEN = 48
 BS = 8  # arena block size
@@ -161,10 +162,13 @@ def _shared_prefix_prompts(rng, n, sys_len=2 * BS + 1):
 
 def _run(prompts, n_tok, temperature, *, paged, **kw):
     cfg, params = _setup()
-    eng = ContinuousBatchingEngine(
-        cfg, params, max_len=MAX_LEN, n_slots=3, block_size=BS,
-        use_paged_kernel=paged is not None, paged_impl=paged, **kw)
-    rids = [eng.submit(p, n_tok, temperature=temperature, seed=i)
+    eng = ContinuousBatchingEngine(cfg, params,
+                                   config=EngineConfig(max_len=MAX_LEN,
+                                                       n_slots=3,
+            block_size=BS, use_paged_kernel=paged is not None,
+            paged_impl=paged, **kw))
+    rids = [eng.submit(p, SamplingParams(max_tokens=n_tok,
+                                         temperature=temperature, seed=i))
             for i, p in enumerate(prompts)]
     out = eng.drain()
     return [out[r] for r in rids]
@@ -201,5 +205,7 @@ def test_engine_pallas_interpret_token_exact(rng):
 def test_paged_requires_block_mode(rng):
     cfg, params = _setup()
     with pytest.raises(ValueError, match="block-mode"):
-        ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
-                                 prefix_cache=False, use_paged_kernel=True)
+        ContinuousBatchingEngine(cfg, params,
+                                 config=EngineConfig(max_len=MAX_LEN,
+                                                     n_slots=2,
+                prefix_cache=False, use_paged_kernel=True))

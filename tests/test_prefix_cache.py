@@ -19,6 +19,7 @@ import repro.configs as C
 from repro.models import params as pp
 from repro.models.model import Model
 from repro.serve import (BlockPool, ContinuousBatchingEngine, DecodeEngine,
+                         EngineConfig, SamplingParams,
                          RadixPrefixCache)
 
 MAX_LEN = 48
@@ -160,15 +161,17 @@ def _shared_prefix_prompts(rng, n, n_sys=2, sys_len=17):
 def _run(prompts, n_tok, temperature, prefix_cache, stagger=0, n_slots=3,
          **kw):
     cfg, params = _setup()
-    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
-                                   n_slots=n_slots,
-                                   prefix_cache=prefix_cache,
-                                   block_size=BS, **kw)
+    eng = ContinuousBatchingEngine(cfg, params,
+                                   config=EngineConfig(max_len=MAX_LEN,
+                                                       n_slots=n_slots,
+            prefix_cache=prefix_cache, block_size=BS, **kw))
     rids = []
     for i, p in enumerate(prompts):
         if stagger and i and i % stagger == 0:
             eng.step()  # admissions interleave with in-flight decode
-        rids.append(eng.submit(p, n_tok, temperature=temperature, seed=i))
+        rids.append(eng.submit(p, SamplingParams(max_tokens=n_tok,
+                                                 temperature=temperature,
+                seed=i)))
     out = eng.drain()
     return eng, [out[r] for r in rids]
 
@@ -211,13 +214,15 @@ def test_repeat_prompt_skips_prefill_compute(rng):
     """A repeated prompt must re-reference committed blocks: the second
     pass prefills only the uncached suffix tokens."""
     cfg, params = _setup()
-    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=1,
-                                   prefix_cache=True, block_size=BS)
+    eng = ContinuousBatchingEngine(cfg, params,
+                                   config=EngineConfig(max_len=MAX_LEN,
+                                                       n_slots=1,
+            prefix_cache=True, block_size=BS))
     p = rng.integers(0, cfg.vocab, (2 * BS + 3,)).astype(np.int32)
-    r1 = eng.submit(p, 4, seed=0)
+    r1 = eng.submit(p, SamplingParams(max_tokens=4, seed=0))
     first = eng.drain()[r1]
     t0 = eng.prefix_stats()["prefill_tokens"]
-    r2 = eng.submit(p, 4, seed=0)
+    r2 = eng.submit(p, SamplingParams(max_tokens=4, seed=0))
     second = eng.drain()[r2]
     np.testing.assert_array_equal(first, second)
     stats = eng.prefix_stats()
@@ -234,12 +239,13 @@ def test_unadmit_under_pool_pressure_leaks_no_refcounts(rng):
     requeue, then unpin, drain, and check every non-reserved block is
     either free or committed with refcount zero."""
     cfg, params = _setup()
-    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
-                                   prefix_cache=True, block_size=BS,
-                                   prefill_chunk=BS)
+    eng = ContinuousBatchingEngine(cfg, params,
+                                   config=EngineConfig(max_len=MAX_LEN,
+                                                       n_slots=2,
+            prefix_cache=True, block_size=BS, prefill_chunk=BS))
     pool = eng.prefix_cache.pool
     base = rng.integers(0, cfg.vocab, (2 * BS + 3,)).astype(np.int32)
-    first = eng.submit(base, 5, seed=0)
+    first = eng.submit(base, SamplingParams(max_tokens=5, seed=0))
     assert first in eng.drain()  # commits base's full blocks into the trie
     matched_blocks = eng.prefix_cache.match(base)
     assert len(matched_blocks) == 2
@@ -248,7 +254,8 @@ def test_unadmit_under_pool_pressure_leaks_no_refcounts(rng):
     pool.incref(pinned)
     prompts = [np.concatenate([base, rng.integers(0, cfg.vocab, (10 + i,))
                                .astype(np.int32)]) for i in range(2)]
-    rids = [eng.submit(p, 6, seed=1 + i) for i, p in enumerate(prompts)]
+    rids = [eng.submit(p, SamplingParams(max_tokens=6, seed=1 + i)) for i,
+            p in enumerate(prompts)]
     for _ in range(3):
         eng.step()
     # both admissions failed mid-PREFILLING and went back to the queue,
@@ -272,11 +279,13 @@ def test_unadmit_under_pool_pressure_leaks_no_refcounts(rng):
 
 def test_fresh_memo_is_bounded(rng):
     cfg, params = _setup()
-    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
-                                   prefix_cache=True, bucket_prompts=True)
+    eng = ContinuousBatchingEngine(cfg, params,
+                                   config=EngineConfig(max_len=MAX_LEN,
+                                                       n_slots=2,
+            prefix_cache=True, bucket_prompts=True))
     for i, L in enumerate(range(4, 34, 2)):
-        eng.submit(rng.integers(0, cfg.vocab, (L,)).astype(np.int32), 2,
-                   seed=i)
+        eng.submit(rng.integers(0, cfg.vocab, (L,)).astype(np.int32),
+                   SamplingParams(max_tokens=2, seed=i))
     eng.drain()
     assert len(eng.cache._fresh) <= 8
 
@@ -288,8 +297,9 @@ def test_recurrent_family_falls_back_contiguous(rng, arch):
     must stay token-exact vs the static engine through the fallback."""
     cfg = C.get_smoke(arch).replace(compute_dtype="float32")
     params = pp.init_params(Model(cfg).build(), jax.random.key(0))
-    eng = ContinuousBatchingEngine(cfg, params, max_len=32, n_slots=2,
-                                   prefix_cache=True)
+    eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(max_len=32,
+                                                                    n_slots=2,
+            prefix_cache=True))
     assert eng.prefix_cache is None and not eng.bucket_prompts
     legacy = DecodeEngine(cfg, params, max_len=32, batch=2)
     prompt = rng.integers(0, cfg.vocab, (2, 7)).astype(np.int32)
@@ -300,8 +310,10 @@ def test_recurrent_family_falls_back_contiguous(rng, arch):
 
 def test_prefix_stats_disabled_fallback(rng):
     cfg, params = _setup()
-    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2,
-                                   prefix_cache=False)
+    eng = ContinuousBatchingEngine(cfg, params,
+                                   config=EngineConfig(max_len=MAX_LEN,
+                                                       n_slots=2,
+            prefix_cache=False))
     assert eng.prefix_stats() == {"enabled": False, "prefill_tokens": 0,
                                   "saved_tokens": 0, "prefill_chunk": None,
                                   "prefill_chunk_steps": 0}

@@ -13,7 +13,8 @@ import repro.configs as C
 from repro.core.swis import QuantConfig
 from repro.models import params as pp
 from repro.models.model import Model
-from repro.serve import ContinuousBatchingEngine, DecodeEngine
+from repro.serve import (ContinuousBatchingEngine, DecodeEngine,
+                         EngineConfig, SamplingParams)
 
 MAX_LEN = 48
 QCFG = QuantConfig(method="swis", n_shifts=4, group_size=4)
@@ -38,8 +39,10 @@ def test_continuous_matches_legacy(rng, packed, temperature):
     prompt = _prompts(rng, 3, 8)
     legacy = DecodeEngine(cfg, params, max_len=MAX_LEN, batch=3,
                           packed=packed, quant_cfg=QCFG)
-    cont = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=3,
-                                    packed=packed, quant_cfg=QCFG)
+    cont = ContinuousBatchingEngine(cfg, params,
+                                    config=EngineConfig(max_len=MAX_LEN,
+                                                        n_slots=3,
+            packed=packed, quant_cfg=QCFG))
     want = legacy.generate(prompt, 10, temperature=temperature, seed=7)
     got = cont.generate(prompt, 10, temperature=temperature, seed=7)
     np.testing.assert_array_equal(got, want)
@@ -54,18 +57,24 @@ def test_staggered_arrival_is_lockstep_consistent(rng, temperature):
     pb = _prompts(rng, 1, 9)[0]
 
     def run(stagger_b):
-        eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
-                                       n_slots=2)
+        eng = ContinuousBatchingEngine(cfg, params,
+                                       config=EngineConfig(max_len=MAX_LEN,
+                                                           n_slots=2))
         out = {}
-        ra = eng.submit(pa, 10, temperature=temperature, seed=1)
+        ra = eng.submit(pa, SamplingParams(max_tokens=10,
+                                           temperature=temperature, seed=1))
         rb = None
         if not stagger_b:
-            rb = eng.submit(pb, 6, temperature=temperature, seed=2)
+            rb = eng.submit(pb, SamplingParams(max_tokens=6,
+                                               temperature=temperature,
+                    seed=2))
         for _ in range(3):  # A decodes several tokens first
             for f in eng.step():
                 out[f.rid] = f.tokens
         if stagger_b:
-            rb = eng.submit(pb, 6, temperature=temperature, seed=2)
+            rb = eng.submit(pb, SamplingParams(max_tokens=6,
+                                               temperature=temperature,
+                    seed=2))
         for rid, full in eng.drain().items():
             s0 = len(pa) if rid == ra else len(pb)
             out[rid] = full[s0:]
@@ -83,14 +92,18 @@ def test_queue_beyond_capacity_recycles_slots(rng):
     cfg, params = _setup()
     lens = (4, 6, 6, 9, 5)
     prompts = [_prompts(rng, 1, n)[0] for n in lens]
-    eng = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=2)
-    rids = [eng.submit(p, 7, seed=i) for i, p in enumerate(prompts)]
+    eng = ContinuousBatchingEngine(cfg, params,
+                                   config=EngineConfig(max_len=MAX_LEN,
+                                                       n_slots=2))
+    rids = [eng.submit(p, SamplingParams(max_tokens=7, seed=i)) for i,
+            p in enumerate(prompts)]
     out = eng.drain()
     assert sorted(out) == sorted(rids)
     for i, (p, rid) in enumerate(zip(prompts, rids)):
-        solo = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
-                                        n_slots=2)
-        srid = solo.submit(p, 7, seed=i)
+        solo = ContinuousBatchingEngine(cfg, params,
+                                        config=EngineConfig(max_len=MAX_LEN,
+                                                            n_slots=2))
+        srid = solo.submit(p, SamplingParams(max_tokens=7, seed=i))
         want = solo.drain()[srid]
         np.testing.assert_array_equal(out[rid], want)
         assert out[rid].shape == (len(p) + 7,)
@@ -98,9 +111,10 @@ def test_queue_beyond_capacity_recycles_slots(rng):
 
 def test_submit_rejects_overflow(rng):
     cfg, params = _setup()
-    eng = ContinuousBatchingEngine(cfg, params, max_len=16, n_slots=1)
+    eng = ContinuousBatchingEngine(cfg, params, config=EngineConfig(max_len=16,
+                                                                    n_slots=1))
     with pytest.raises(ValueError, match="max_len"):
-        eng.submit(_prompts(rng, 1, 10)[0], 10)
+        eng.submit(_prompts(rng, 1, 10)[0], SamplingParams(max_tokens=10))
 
 
 def test_generate_more_requests_than_slots(rng):
@@ -109,9 +123,12 @@ def test_generate_more_requests_than_slots(rng):
     wide-slot run."""
     cfg, params = _setup()
     prompt = _prompts(rng, 4, 6)
-    wide = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN, n_slots=4)
-    narrow = ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
-                                      n_slots=2)
+    wide = ContinuousBatchingEngine(cfg, params,
+                                    config=EngineConfig(max_len=MAX_LEN,
+                                                        n_slots=4))
+    narrow = ContinuousBatchingEngine(cfg, params,
+                                      config=EngineConfig(max_len=MAX_LEN,
+                                                          n_slots=2))
     want = wide.generate(prompt, 6, temperature=0.5, seed=3)
     got = narrow.generate(prompt, 6, temperature=0.5, seed=3)
     np.testing.assert_array_equal(got, want)

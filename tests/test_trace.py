@@ -23,7 +23,8 @@ import numpy as np
 import repro.configs as C
 from repro.models import params as pp
 from repro.models.model import Model
-from repro.serve import ContinuousBatchingEngine
+from repro.serve import (ContinuousBatchingEngine, EngineConfig,
+                         SamplingParams)
 from repro.serve import trace as tr
 from repro.serve.trace import read_jsonl
 
@@ -46,9 +47,10 @@ def _setup():
 
 def _engine(n_slots=2, **kw):
     cfg, params = _setup()
-    return ContinuousBatchingEngine(cfg, params, max_len=MAX_LEN,
-                                    n_slots=n_slots, prefix_cache=True,
-                                    block_size=BS, **kw)
+    return ContinuousBatchingEngine(cfg, params,
+                                    config=EngineConfig(max_len=MAX_LEN,
+                                                        n_slots=n_slots,
+            prefix_cache=True, block_size=BS, **kw))
 
 
 def _prompt(rng, n):
@@ -76,7 +78,7 @@ def _assert_ordered(events):
 
 def test_ttft_tpot_queue_wait_from_raw_events(rng):
     eng = _engine()
-    rid = eng.submit(_prompt(rng, 10), 6)
+    rid = eng.submit(_prompt(rng, 10), SamplingParams(max_tokens=6))
     eng.drain()
     evs = eng.tracer.events(rid)
     _assert_ordered(evs)
@@ -101,7 +103,8 @@ def test_interleaved_requests_each_strictly_ordered(rng):
     eng = _engine(n_slots=2)
     rids = []
     for i in range(5):  # more requests than slots: recycling + queueing
-        rids.append(eng.submit(_prompt(rng, 4 + 3 * i), 4 + i, seed=i))
+        rids.append(eng.submit(_prompt(rng, 4 + 3 * i),
+                               SamplingParams(max_tokens=4 + i, seed=i)))
         eng.step()
     eng.drain()
     for rid in rids:
@@ -114,10 +117,10 @@ def test_interleaved_requests_each_strictly_ordered(rng):
 def test_chunked_prefill_and_prefix_hit_events(rng):
     eng = _engine(n_slots=2, prefill_chunk=BS)
     base = _prompt(rng, 2 * BS + 3)
-    r1 = eng.submit(base, 4, seed=0)
+    r1 = eng.submit(base, SamplingParams(max_tokens=4, seed=0))
     eng.drain()  # commits base's blocks
     tail = np.concatenate([base, _prompt(rng, 5)])
-    r2 = eng.submit(tail, 4, seed=1)
+    r2 = eng.submit(tail, SamplingParams(max_tokens=4, seed=1))
     eng.drain()
     evs1, evs2 = eng.tracer.events(r1), eng.tracer.events(r2)
     _assert_ordered(evs1)
@@ -136,7 +139,8 @@ def test_jsonl_roundtrip_same_events(rng, tmp_path):
     eng = _engine(n_slots=2, prefill_chunk=BS)
     base = _prompt(rng, 2 * BS + 3)
     for i in range(3):
-        eng.submit(np.concatenate([base, _prompt(rng, 3 + i)]), 5, seed=i)
+        eng.submit(np.concatenate([base, _prompt(rng, 3 + i)]),
+                   SamplingParams(max_tokens=5, seed=i))
         eng.step()
     eng.drain()
     events = eng.tracer.events()
@@ -158,7 +162,7 @@ def test_jsonl_roundtrip_same_events(rng, tmp_path):
 def test_trace_ring_is_bounded(rng):
     eng = _engine(trace_capacity=16)
     for i in range(3):
-        eng.submit(_prompt(rng, 6), 8, seed=i)
+        eng.submit(_prompt(rng, 6), SamplingParams(max_tokens=8, seed=i))
     eng.drain()
     assert len(eng.tracer) == 16
     assert eng.tracer.dropped > 0
@@ -172,7 +176,7 @@ def test_trace_ring_is_bounded(rng):
 
 def test_metrics_unified_snapshot_and_prefix_stats_view(rng):
     eng = _engine()
-    eng.submit(_prompt(rng, 12), 6)
+    eng.submit(_prompt(rng, 12), SamplingParams(max_tokens=6))
     eng.drain()
     m = eng.metrics()
     assert set(m) == {"engine", "scheduler", "prefix_cache", "block_pool",
@@ -198,7 +202,8 @@ def test_reset_clears_metrics_and_trace(rng):
 
     def run():
         for i in range(3):
-            eng.submit(_prompt(rng, 5 + 4 * i), 4, seed=i)
+            eng.submit(_prompt(rng, 5 + 4 * i), SamplingParams(max_tokens=4,
+                                                               seed=i))
         eng.drain()
         m = eng.metrics()
         return {"steps": m["engine"]["counters"]["step.count"],
@@ -227,7 +232,8 @@ def test_disabled_observability_is_inert_and_token_exact(rng):
     on, off = _engine(), _engine(enable_metrics=False)
     outs = []
     for eng in (on, off):
-        rids = [eng.submit(p, 5, seed=i) for i, p in enumerate(prompts)]
+        rids = [eng.submit(p, SamplingParams(max_tokens=5, seed=i)) for i,
+                p in enumerate(prompts)]
         out = eng.drain()
         outs.append([out[r] for r in rids])
     for a, b in zip(*outs):
@@ -254,7 +260,9 @@ def test_unadmit_under_pool_starvation_no_gauge_drift(rng):
     pool = eng.prefix_cache.pool
     pinned = pool.alloc(pool.n_free())
     pool.incref(pinned)
-    rids = [eng.submit(_prompt(rng, 10 + i), 5, seed=i) for i in range(2)]
+    rids = [eng.submit(_prompt(rng, 10 + i),
+                       SamplingParams(max_tokens=5, seed=i))
+            for i in range(2)]
     for _ in range(3):
         eng.step()
         g = eng.scheduler.gauges()
