@@ -21,7 +21,16 @@ actually present in the run —
   (``fused_step`` true), issue strictly fewer model dispatches than the
   separate chunk-then-decode pass on the same traffic, and its p95 step
   latency must be no worse than the separate pass
-  (``--min-fused-speedup``, default 1.0, same noise tolerance).
+  (``--min-fused-speedup``, default 1.0, same noise tolerance);
+* ``spec_decode``: the gated pass must actually speculate
+  (``spec_decode`` true, ``spec_proposed`` > 0), its accept rate must be
+  positive (a draft that never matches the verify targets means the
+  truncated-slice draft is broken, not just slow), and its PER-TOKEN p95
+  step latency — ``p95_step_s`` over tokens emitted per step, for both
+  the spec and the plain pass — must clear
+  ``--min-spec-speedup`` vs the plain-decode pass (default 0.5: a
+  sequential-launch draft on CPU is expected to cost wall time; the gate
+  is a collapse floor, the accept/dispatch accounting is the signal).
 
 Workloads absent from the report are skipped, so the script composes with
 any ``--workloads`` selection. Exits non-zero with a reason on failure.
@@ -104,8 +113,8 @@ def check_metrics(results, metrics_dir):
 
 
 def check(results, min_speedup, min_paged_speedup=1.0,
-          min_fused_speedup=1.0, allow_missing_speedup=False,
-          noise_tolerance=0.1):
+          min_fused_speedup=1.0, min_spec_speedup=0.5,
+          allow_missing_speedup=False, noise_tolerance=0.1):
     errors = []
     sp = results.get("shared_prefix")
     if sp is not None:
@@ -178,6 +187,42 @@ def check(results, min_speedup, min_paged_speedup=1.0,
                     f"mixed_load fused p95 step speedup {speedup} < "
                     f"{min_fused_speedup} (fused {ml.get('p95_step_s')}s "
                     f"vs separate {ml.get('p95_step_s_separate')}s)")
+    sd = results.get("spec_decode")
+    if sd is not None:
+        if not sd.get("spec_decode", False):
+            errors.append(
+                f"spec_decode gated pass did not speculate "
+                f"(spec_decode={sd.get('spec_decode')!r})")
+        if not sd.get("spec_proposed", 0) > 0:
+            errors.append(
+                f"spec_decode proposed no drafts (spec_proposed="
+                f"{sd.get('spec_proposed')!r}) — speculative steps never "
+                f"ran")
+        if not sd.get("accept_rate", 0) > 0:
+            errors.append(
+                f"spec_decode accept_rate not positive: "
+                f"{sd.get('accept_rate')!r} — the truncated-slice draft "
+                f"never matched a verify target")
+        if not isinstance(sd.get("model_dispatches"), int) or \
+                not isinstance(sd.get("model_dispatches_plain"), int):
+            errors.append(
+                "spec_decode dispatch counts missing (model_dispatches / "
+                "model_dispatches_plain) from the report")
+        if "spec_p95_speedup" not in sd:
+            if not allow_missing_speedup:
+                errors.append(
+                    "spec_decode has no spec_p95_speedup (spec vs plain "
+                    "comparison missing); pass --allow-missing-speedup "
+                    "if that is intentional")
+        else:
+            speedup = sd["spec_p95_speedup"]
+            floor = min_spec_speedup * (1.0 - noise_tolerance)
+            if not speedup >= floor:
+                errors.append(
+                    f"spec_decode per-token p95 speedup {speedup} < "
+                    f"{min_spec_speedup} (spec {sd.get('p95_step_s')}s/"
+                    f"step at {sd.get('spec_tokens_per_step')} tok/step "
+                    f"vs plain {sd.get('p95_step_s_plain')}s)")
     return errors
 
 
@@ -196,6 +241,12 @@ def main():
                          "chunk-then-decode path over the fused mixed "
                          "step on the mixed_load workload (1.0 = no "
                          "worse)")
+    ap.add_argument("--min-spec-speedup", type=float, default=0.5,
+                    help="required PER-TOKEN p95 step-latency ratio of "
+                         "plain decode over speculative decode on the "
+                         "spec_decode workload (< 1.0 tolerated: the "
+                         "sequential draft launches cost wall time on "
+                         "CPU; this is a collapse floor)")
     ap.add_argument("--allow-missing-speedup", action="store_true",
                     help="skip (rather than fail) speedup assertions when "
                          "the comparison fields are absent from the report")
@@ -207,7 +258,8 @@ def main():
     with open(args.report) as f:
         results = json.load(f)
     errors = check(results, args.min_speedup, args.min_paged_speedup,
-                   args.min_fused_speedup, args.allow_missing_speedup)
+                   args.min_fused_speedup, args.min_spec_speedup,
+                   args.allow_missing_speedup)
     if args.require_metrics:
         errors += check_metrics(results, args.require_metrics)
     for e in errors:

@@ -27,6 +27,17 @@ Workloads model the traffic shapes a serving fleet actually sees:
                  separate chunk-then-decode) and report p50/p95 step
                  latency each way plus model dispatches per pass (the
                  fused step's one-launch win)
+  spec_decode    deep decode budgets over short prompts — the shape
+                 self-speculative decode exists for; run twice (spec on
+                 with a truncated bit-slice draft + plain decode on the
+                 same traffic, both packed) and report the accept rate,
+                 tokens per spec step, dispatch counts, and the
+                 PER-TOKEN p95 step-latency speedup (a spec step emits
+                 several tokens, so raw per-step latency is the wrong
+                 unit; on CPU the k+1 launches per step usually cost
+                 more wall time than they save — the accept rate and
+                 dispatch accounting are the signal, the speedup gate is
+                 a floor against collapse, not a win claim)
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--packed] \
           [--arch smollm-135m --n-slots 4 --requests 12] \
@@ -146,6 +157,19 @@ def _requests_decode_heavy(rng, cfg, n):
     return out
 
 
+def _requests_spec_decode(rng, cfg, n):
+    """Short prompts, deep decode budgets, a couple of late arrivals:
+    almost every step is a pure-decode step, which is exactly where the
+    speculative draft/verify rounds replace plain one-token steps."""
+    out = []
+    for i in range(n):
+        prompt = rng.integers(0, cfg.vocab,
+                              (int(rng.integers(6, 14)),)).astype(np.int32)
+        arrive = int(rng.integers(0, 8)) if i >= n - n // 4 else 0
+        out.append((prompt, 32, arrive))
+    return out
+
+
 def _requests_mixed_load(rng, cfg, n):
     """Deep decoders occupy most slots from step 0 while chunked long
     prompts keep arriving: every chunk-servicing step pays one chunk of
@@ -167,7 +191,8 @@ WORKLOADS = {"uniform": _requests_uniform, "mixed": _requests_mixed,
              "shared_prefix": _requests_shared_prefix,
              "long_prompt": _requests_long_prompt,
              "decode_heavy": _requests_decode_heavy,
-             "mixed_load": _requests_mixed_load}
+             "mixed_load": _requests_mixed_load,
+             "spec_decode": _requests_spec_decode}
 WORKLOAD_MAX_LEN = {"long_prompt": LONG_MAX_LEN,
                     "decode_heavy": HEAVY_MAX_LEN,
                     "mixed_load": MIXED_MAX_LEN}
@@ -193,7 +218,8 @@ def _decode_gathered_bytes(eng, cfg):
 def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
                  prefix_cache=True, block_size=8, prefill_chunk=None,
                  max_len=None, passes=3, use_paged_kernel=False,
-                 fused_step=False, artifacts_dir=None, artifact_tag=None):
+                 fused_step=False, spec_decode=False, spec_k=3,
+                 draft_slices=None, artifacts_dir=None, artifact_tag=None):
     max_len = max_len or WORKLOAD_MAX_LEN.get(name, MAX_LEN)
     n_slots = WORKLOAD_N_SLOTS.get(name, n_slots)
     if not prefix_cache:
@@ -206,7 +232,8 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
         max_len=max_len, n_slots=n_slots, packed=packed, quant_cfg=qcfg,
         prefix_cache=prefix_cache, block_size=block_size,
         prefill_chunk=prefill_chunk, use_paged_kernel=use_paged_kernel,
-        fused_step=fused_step))
+        fused_step=fused_step, spec_decode=spec_decode, spec_k=spec_k,
+        draft_slices=draft_slices))
 
     def one_pass():
         """Drive the traffic; all timing observability comes from the
@@ -275,8 +302,22 @@ def run_workload(name, cfg, params, *, n_slots, requests, packed, qcfg,
            "prefill_chunk": eng.prefill_chunk,
            "paged_impl": eng.paged_impl,
            "fused_step": eng.fused_step,
+           "spec_decode": eng.spec_decode,
            "requests": len(reqs), "n_slots": n_slots,
            "gen_tokens": total_tokens, **best}
+    if spec_decode:
+        # accept accounting from the last measured pass — the traffic is
+        # deterministic, so the accept pattern is identical across passes
+        c = eng.metrics_registry.snapshot()["counters"]
+        rep["spec_k"] = spec_k
+        rep["draft_slices"] = draft_slices
+        rep["spec_steps"] = c.get("spec.steps", 0)
+        rep["spec_proposed"] = c.get("spec.proposed", 0)
+        rep["spec_accepted"] = c.get("spec.accepted", 0)
+        rep["accept_rate"] = round(
+            c.get("spec.accepted", 0) / max(c.get("spec.proposed", 0), 1), 3)
+        rep["spec_tokens_per_step"] = round(
+            c.get("spec.tokens", 0) / max(c.get("spec.steps", 0), 1), 3)
     if eng.prefix_cache is not None:
         rep["materializes_gathered_kv"] = eng.paged_impl is None
         rep["decode_gathered_bytes_per_step"] = _decode_gathered_bytes(
@@ -425,6 +466,31 @@ def main():
             rep["fused_p95_speedup"] = round(
                 rep_s["p95_step_s"] / rep["p95_step_s"], 2)
             print(json.dumps(rep_s))
+        elif name == "spec_decode" and not args.no_prefix_cache:
+            # self-speculative decode vs plain decode on the same traffic,
+            # both serving packed weights (the truncated-slice draft only
+            # exists on the packed kernel path). The spec report is the
+            # gated one; per-step latency is normalized per TOKEN on BOTH
+            # sides (a plain step emits up to n_slots tokens, a spec step
+            # several per row), so the speedup compares token cost, not
+            # step cost
+            spec_common = {**common, "packed": True}
+            draft = max(1, args.n_shifts - 1)
+            rep = run_workload(name, cfg, params, spec_decode=True,
+                               draft_slices=draft,
+                               prefill_chunk=args.prefill_chunk,
+                               **spec_common)
+            rep_p = run_workload(name, cfg, params,
+                                 prefill_chunk=args.prefill_chunk,
+                                 artifact_tag=f"{name}_plain", **spec_common)
+            rep["p95_step_s_plain"] = rep_p["p95_step_s"]
+            rep["model_dispatches_plain"] = rep_p["model_dispatches"]
+            tok_per_step = rep["gen_tokens"] / max(rep["steps"], 1)
+            tok_per_step_p = rep_p["gen_tokens"] / max(rep_p["steps"], 1)
+            per_token = rep["p95_step_s"] / max(tok_per_step, 1e-9)
+            per_token_p = rep_p["p95_step_s"] / max(tok_per_step_p, 1e-9)
+            rep["spec_p95_speedup"] = round(per_token_p / per_token, 2)
+            print(json.dumps(rep_p))
         else:
             rep = run_workload(name, cfg, params,
                                prefill_chunk=args.prefill_chunk, **common)

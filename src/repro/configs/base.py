@@ -84,6 +84,12 @@ class QuantPolicy:
     # Stripes-like baseline: per-layer LSB truncation of 8-bit activations
     # before every GEMM (paper §5 'Act. Trunc.'). 0 = off.
     act_shifts: int = 0
+    # Truncated-precision execution over SWIS-packed weights: evaluate
+    # only the k most significant bit-slices of every packed GEMM (the
+    # bit-serial PE ends its shift-accumulate loop k slices in). None =
+    # full precision. The serve engine's self-speculative draft model is
+    # the same packed params under a policy with keep_slices set.
+    keep_slices: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

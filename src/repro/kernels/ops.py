@@ -39,7 +39,7 @@ def _pick_tiles(m: int, k: int, n: int, group: int):
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _matmul(x, planes, static):
-    group, n_shifts, use_pallas, interpret, consecutive = static
+    group, n_shifts, use_pallas, interpret, consecutive, keep_slices = static
     sign_plane, mask_planes, shifts, scale = planes
     if use_pallas:
         m, k = x.shape
@@ -49,10 +49,11 @@ def _matmul(x, planes, static):
             x, sign_plane, mask_planes, shifts, scale,
             n_shifts=n_shifts, group=group, bm=bm, bn=bn, bk=bk,
             interpret=interpret, consecutive=consecutive,
+            keep_slices=keep_slices,
         )
     return _ref.swis_matmul_ref(
         x, sign_plane, mask_planes, shifts, scale, group=group,
-        consecutive=consecutive,
+        consecutive=consecutive, keep_slices=keep_slices,
     )
 
 
@@ -61,10 +62,13 @@ def _matmul_fwd(x, planes, static):
 
 
 def _matmul_bwd(static, planes, g):
-    group, consecutive = static[0], static[4]
+    group, consecutive, keep_slices = static[0], static[4], static[5]
     sign_plane, mask_planes, shifts, scale = planes
+    # the gradient of a truncated matmul w.r.t. x is the truncated w^T:
+    # keep_slices flows into the bwd dequant so jacobian tests stay exact
     w = _ref.dequant_ref(sign_plane, mask_planes, shifts, scale, group=group,
-                         dtype=g.dtype, consecutive=consecutive)
+                         dtype=g.dtype, consecutive=consecutive,
+                         keep_slices=keep_slices)
     return (g @ w.T, None)
 
 
@@ -77,12 +81,16 @@ def swis_matmul(
     *,
     use_pallas: bool = False,
     interpret: bool = True,
+    keep_slices=None,
 ) -> jnp.ndarray:
-    """``x @ dequant(pw)`` for arbitrary-rank ``x`` (matmul over last axis)."""
+    """``x @ dequant(pw)`` for arbitrary-rank ``x`` (matmul over last axis).
+
+    ``keep_slices=k`` evaluates only the k most significant bit-planes
+    (truncated-precision execution; None = all planes)."""
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     static = (pw.group_size, pw.n_shifts, use_pallas, interpret,
-              pw.method == "swis_c")
+              pw.method == "swis_c", keep_slices)
     planes = (pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale)
     y = _matmul(x2, planes, static)
     return y.reshape(*shape[:-1], y.shape[-1])

@@ -21,17 +21,25 @@ def dequant_ref(
     group: int,
     dtype=jnp.float32,
     consecutive: bool = False,
+    keep_slices=None,
 ) -> jnp.ndarray:
     """Dense (K, N) dequantized weights from packed planes (jnp, no Pallas).
 
     ``consecutive``: SWIS-C layout — ``shifts`` holds one offset byte per
     group and shift j = offset + j.
+    ``keep_slices``: truncate to the k most significant bit-planes (plane
+    shifts are ascending, so the top-k planes are the last k) — the
+    reference for the kernel's truncated-precision draft execution.
     """
     n_shifts = mask_planes.shape[0]
+    if keep_slices is not None and not 1 <= keep_slices <= n_shifts:
+        raise ValueError(
+            f"keep_slices must be in [1, {n_shifts}], got {keep_slices}")
+    first = 0 if keep_slices is None else n_shifts - keep_slices
     k = sign_plane.shape[0] * 32
     sign = 1 - 2 * unpack_bits_u32(sign_plane)  # (K, N) int32
     acc = jnp.zeros(sign.shape, jnp.int32)
-    for j in range(n_shifts):
+    for j in range(first, n_shifts):
         bits = unpack_bits_u32(mask_planes[j])
         if consecutive:
             s = shifts[:, :, 0].astype(jnp.int32) + j
@@ -58,10 +66,12 @@ def swis_matmul_ref(
     *,
     group: int,
     consecutive: bool = False,
+    keep_slices=None,
 ) -> jnp.ndarray:
     """Oracle for :func:`repro.kernels.swis_matmul.swis_matmul_packed`."""
     w = dequant_ref(sign_plane, mask_planes, shifts, scale, group=group,
-                    dtype=x.dtype, consecutive=consecutive)
+                    dtype=x.dtype, consecutive=consecutive,
+                    keep_slices=keep_slices)
     return jax.lax.dot_general(
         x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )

@@ -40,6 +40,7 @@ def _swis_matmul_kernel(
     bk: int,
     k_steps: int,
     consecutive: bool,
+    keep_slices=None,
 ):
     k_idx = pl.program_id(2)
 
@@ -58,8 +59,13 @@ def _swis_matmul_kernel(
     # Shift-accumulate (Eq. 7): one mask plane per shift index. The plane
     # loop is unrolled (n_shifts is static) — the double-shift PE of §3.1
     # corresponds to the compiler pipelining two planes per pass.
+    # keep_slices truncates execution to the top-k most significant planes
+    # (shift combos are ascending, so plane n_shifts-1 carries the largest
+    # shift): the bit-serial PE simply stops k cycles early, which is the
+    # truncated-precision draft execution speculative decode runs on.
+    first = 0 if keep_slices is None else n_shifts - keep_slices
     w_mag = jnp.zeros((bk, bn), jnp.int32)
-    for j in range(n_shifts):
+    for j in range(first, n_shifts):
         mbits = (mask_ref[j][:, None, :] >> lane) & jnp.uint32(1)
         mbits = mbits.astype(jnp.int32).reshape(bk, bn)
         if consecutive:  # SWIS-C: shift j = per-group offset + j
@@ -89,7 +95,7 @@ def _swis_matmul_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("n_shifts", "group", "bm", "bn", "bk", "interpret",
-                     "consecutive"),
+                     "consecutive", "keep_slices"),
 )
 def swis_matmul_packed(
     x: jnp.ndarray,
@@ -105,12 +111,19 @@ def swis_matmul_packed(
     bk: int = 512,
     interpret: bool = True,
     consecutive: bool = False,
+    keep_slices=None,
 ):
     """``x (M, K) @ dequant(packed (K, N)) -> (M, N) float32``.
 
     See module docstring for the packed layout. ``interpret=True`` executes
     the kernel body in Python on CPU (validation); on real TPU pass False.
+    ``keep_slices=k`` evaluates only the k most significant bit-planes —
+    the truncated-precision execution that a bit-serial PE gets by ending
+    its shift-accumulate loop early (speculative-draft path).
     """
+    if keep_slices is not None and not 1 <= keep_slices <= n_shifts:
+        raise ValueError(
+            f"keep_slices must be in [1, {n_shifts}], got {keep_slices}")
     m, k = x.shape
     kw, n = sign_plane.shape
     assert kw * 32 == k, (kw, k)
@@ -132,6 +145,7 @@ def swis_matmul_packed(
         bk=bk,
         k_steps=k_steps,
         consecutive=consecutive,
+        keep_slices=keep_slices,
     )
     scale2d = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, n))
 

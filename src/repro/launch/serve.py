@@ -71,6 +71,16 @@ def main():
                     help="fused mixed step: the per-step prefill chunk and "
                          "the decode batch share ONE dispatch (requires "
                          "--prefill-chunk)")
+    ap.add_argument("--spec", action="store_true",
+                    help="self-speculative decode: draft --spec-k tokens "
+                         "with the model truncated to --draft-slices SWIS "
+                         "bit-planes, verify in one full-precision launch "
+                         "(continuous engine; token-exact vs plain decode)")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="max draft tokens per speculative round")
+    ap.add_argument("--draft-slices", type=int, default=None,
+                    help="bit-slices kept for the draft pass (requires "
+                         "--packed; default: full precision)")
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--n-shifts", type=int, default=4)
     ap.add_argument("--group-size", type=int, default=4)
@@ -116,7 +126,8 @@ def main():
             cfg, params, config=EngineConfig(
                 max_len=max_len, n_slots=args.n_slots, packed=args.packed,
                 quant_cfg=qcfg, prefill_chunk=args.prefill_chunk,
-                fused_step=args.fused))
+                fused_step=args.fused, spec_decode=args.spec,
+                spec_k=args.spec_k, draft_slices=args.draft_slices))
         sp = functools.partial(SamplingParams, max_tokens=args.tokens,
                                temperature=args.temperature)
         rids = [eng.submit(p, sp(seed=i)) for i, p in enumerate(prompts)]
@@ -156,6 +167,13 @@ def main():
             report["ttft_p95_s"] = round(tsum["ttft_s"]["p95"], 5)
         if tsum["tpot_s"]:
             report["tpot_p50_s"] = round(tsum["tpot_s"]["p50"], 6)
+        if args.spec:
+            c = eng.metrics_registry.snapshot()["counters"]
+            report["spec_proposed"] = c.get("spec.proposed", 0)
+            report["spec_accepted"] = c.get("spec.accepted", 0)
+            report["spec_accept_rate"] = round(
+                c.get("spec.accepted", 0)
+                / max(c.get("spec.proposed", 0), 1), 3)
     print(json.dumps(report, indent=1))
     print("sample:", sample.tolist())
 

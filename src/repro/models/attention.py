@@ -237,6 +237,17 @@ def attention_apply(
             # gathered. Valid writes cannot collide: a request's write
             # region lies in blocks it exclusively owns, and each request
             # contributes valid tokens from exactly one row.
+            #
+            # Speculative decode rides this same path for BOTH of its
+            # launches (never the plain block-table decode branch below,
+            # whose bi is unclipped): draft steps are S=1 rows with
+            # q_lens in {0, 1} (rows past their per-row draft budget mask
+            # to the trash block), and the verify launch feeds S = k+1
+            # tokens per speculating row. Rejected drafts need no explicit
+            # rollback: their stale arena entries sit at positions strictly
+            # beyond every later query position until the next feed window
+            # overwrites them (write-before-attend in this same block), so
+            # causal masking (kv pos <= q pos) keeps them unread.
             assert jnp.ndim(idx) == 1 and per_slot, (jnp.ndim(idx), per_slot)
             nb = block_tables.shape[1]
             pos2 = positions  # (B, S): row r writes at idx[r] + [0, S)

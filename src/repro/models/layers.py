@@ -86,7 +86,9 @@ def dense(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
             group_size=k // w["shifts"].shape[0],
             n_shifts=int(w["mask_planes"].shape[0]), k=k,
             c=w["sign_plane"].shape[1], method=method)
-        return ops.swis_matmul(x, pw, use_pallas=False).astype(x.dtype)
+        return ops.swis_matmul(
+            x, pw, use_pallas=False,
+            keep_slices=cfg.quant.keep_slices).astype(x.dtype)
     if cfg.quant.act_shifts:
         from repro.core.swis import act_truncate
 

@@ -317,6 +317,28 @@ class Model:
             paged=paged, q_lens=jnp.asarray(q_lens, jnp.int32))
         return logits[:, -1], cache
 
+    def verify_step(self, params, batch, cache, start, q_lens,
+                    block_tables, *, paged=None):
+        """Speculative-verify launch: score ALL positions of a multi-token
+        batch in one dispatch. Same per-row ``q_lens`` routing as
+        :meth:`mixed_step` — row ``r`` feeds ``q_lens[r]`` tokens starting
+        at absolute position ``start[r]`` ([bonus token, draft_1..draft_k]
+        for a speculating slot, 0 for idle rows), each row's K/V is
+        committed through its block table inside the launch (invalid
+        tokens route to the trash block) — but the returned logits are the
+        full (B, S, V) tensor instead of one position per row: position j
+        of row r is the next-token distribution after its first j+1 fed
+        tokens, exactly what the accept-prefix rule compares draft tokens
+        against. Costs a norm+unembed over all S positions (S = spec_k+1,
+        so the extra unembed work is a few rows, not a prefill's worth).
+        """
+        logits, cache, _ = self.apply(
+            params, batch, cache=cache,
+            cache_index=jnp.asarray(start, jnp.int32),
+            block_tables=block_tables, paged=paged,
+            q_lens=jnp.asarray(q_lens, jnp.int32))
+        return logits, cache
+
     # ------------------------------------------------------------------
     # Dry-run input specs
     # ------------------------------------------------------------------

@@ -57,6 +57,16 @@ class EngineConfig:
       paged_impl — kernel backend override: one of "pallas",
         "pallas_interpret", "xla" (None: auto — "pallas" on TPU, "xla"
         elsewhere).
+    Speculative decode:
+      spec_decode — self-speculative multi-token decode: a draft pass
+        proposes up to spec_k tokens per step, one full-precision verify
+        launch scores them all, the longest matching prefix (plus the
+        verify's bonus token) is accepted — token-exact vs. plain decode
+        for every accept pattern (block mode only);
+      spec_k — max draft tokens proposed per step (>= 1);
+      draft_slices — run draft passes with SWIS weights truncated to this
+        many most-significant bit-slices (requires packed=True; None:
+        the draft runs at full precision, accept rate 1.0).
     Observability:
       enable_metrics — phase timers / counters / lifecycle tracer;
       trace_capacity — trace ring size (events).
@@ -79,6 +89,10 @@ class EngineConfig:
     quant_cfg: Optional[QuantConfig] = None
     use_paged_kernel: bool = False
     paged_impl: Optional[str] = None
+    # speculative decode
+    spec_decode: bool = False
+    spec_k: int = 3
+    draft_slices: Optional[int] = None
     # observability
     enable_metrics: bool = True
     trace_capacity: int = 65536
@@ -124,6 +138,28 @@ class EngineConfig:
             raise ValueError(
                 "paged_impl is set but use_paged_kernel=False — enable "
                 "the paged kernel or drop the impl override")
+        if self.spec_decode and not self.prefix_cache:
+            raise ValueError(
+                "spec_decode requires the block-mode prefix cache "
+                "(prefix_cache=True): draft and verify launches route "
+                "per-row token counts through the block tables")
+        if self.spec_decode and self.spec_k < 1:
+            raise ValueError(
+                f"spec_k must be >= 1 when spec_decode is on, got "
+                f"{self.spec_k}")
+        if self.draft_slices is not None:
+            if not self.spec_decode:
+                raise ValueError(
+                    "draft_slices is set but spec_decode=False — enable "
+                    "speculative decode or drop the truncation knob")
+            if not self.packed:
+                raise ValueError(
+                    "draft_slices truncates the SWIS bit-plane kernel "
+                    "path and requires packed=True (unpacked weights "
+                    "have no slices to truncate)")
+            if self.draft_slices < 1:
+                raise ValueError(
+                    f"draft_slices must be >= 1, got {self.draft_slices}")
 
 
 @dataclasses.dataclass(frozen=True)

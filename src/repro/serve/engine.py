@@ -39,7 +39,7 @@ from repro.serve.config import EngineConfig, SamplingParams
 from repro.serve.kv_cache import SlotKVCache
 from repro.serve.metrics import MetricsRegistry
 from repro.serve.prefix_cache import BlockPool, RadixPrefixCache
-from repro.serve.quantized import pack_tree
+from repro.serve.quantized import pack_tree, total_slices
 from repro.serve.scheduler import Finished, RequestScheduler
 from repro.serve.trace import RequestTracer
 
@@ -139,6 +139,16 @@ class ContinuousBatchingEngine:
     K/V commits into the arena inside the same launch — the separate
     chunk-then-decode sequencing (two dispatches plus a host-side block
     commit) remains the token-exact parity reference when off.
+
+    With ``spec_decode=True`` (block mode only) pure-decode steps run
+    self-speculatively: ``spec_k`` draft tokens are proposed by the model
+    itself with SWIS weights truncated to ``draft_slices`` bit-planes
+    (``None``: full precision), one full-precision verify launch scores
+    every proposal, and the longest matching prefix plus the verify's
+    bonus token is accepted — several tokens per step when drafts agree,
+    never fewer than one, and token-exact vs. plain decode for every
+    accept pattern (see docs/serving.md "Speculative decode"). Steps that
+    service a fused chunk group still run the plain ``_mixed_once`` path.
     """
 
     def __init__(self, cfg: ArchConfig, params: Any,
@@ -246,6 +256,40 @@ class ContinuousBatchingEngine:
         self._mixed = jax.jit(
             functools.partial(self.model.mixed_step, paged=self.paged_impl),
             donate_argnums=(2,))
+        # self-speculative decode: the draft model IS the target model —
+        # same packed params, same arena — under a quant policy whose
+        # keep_slices truncates every packed GEMM to the top draft_slices
+        # bit-planes (draft_slices=None: full-precision draft, accept
+        # rate 1.0 by construction). Draft steps are S=1 q_lens-masked
+        # mixed launches; the verify launch scores all spec_k+1 positions
+        # at full precision in one dispatch (Model.verify_step).
+        self.spec_decode = config.spec_decode
+        self.spec_k = config.spec_k
+        if config.spec_decode:
+            if self.prefix_cache is None:
+                raise ValueError(
+                    "spec_decode requires the block-mode prefix cache "
+                    "(uniform attention caches with prefix_cache=True)")
+            if config.draft_slices is None:
+                self.draft_model = self.model
+            else:
+                total = total_slices(self.params)
+                if not 1 <= config.draft_slices <= total:
+                    raise ValueError(
+                        f"draft_slices={config.draft_slices} out of range: "
+                        f"the packed weights carry {total} bit-slices "
+                        f"(1 <= draft_slices <= {total})")
+                self.draft_model = Model(self.cfg.replace(
+                    quant=dataclasses.replace(
+                        self.cfg.quant, keep_slices=config.draft_slices)))
+            self._draft = jax.jit(
+                functools.partial(self.draft_model.mixed_step,
+                                  paged=self.paged_impl),
+                donate_argnums=(2,))
+            self._verify = jax.jit(
+                functools.partial(self.model.verify_step,
+                                  paged=self.paged_impl),
+                donate_argnums=(2,))
         self._dummy_key = jax.random.key(0)
         self._stat_prefill_tokens = 0
         self._stat_saved_tokens = 0
@@ -345,7 +389,10 @@ class ContinuousBatchingEngine:
                     with m.timer("step.chunk_advance_s"):
                         self._advance_chunk()
             if not decoded and self.scheduler.needs_decode():
-                self._decode_once()
+                if self.spec_decode:
+                    self._spec_once()
+                else:
+                    self._decode_once()
             finished = self.scheduler.pop_finished()
         for f in finished:
             self.tracer.event(tr.FINISH, f.rid, n_tokens=len(f.tokens))
@@ -889,6 +936,115 @@ class ContinuousBatchingEngine:
             self.scheduler.record_decode(np.asarray(nxt))
         for slot, rid, step in live:
             self.tracer.event(tr.DECODE_STEP, rid, slot=slot, step=step)
+
+    def _spec_once(self) -> None:
+        """One self-speculative decode round over the DECODING slots.
+
+        Draft: ``k_max`` sequential S=1 launches of the truncated-slice
+        draft model, each proposing the next token per row through the
+        SAME seeded sampler (key, step) the verify targets use — so a
+        draft that produces the full-precision logits reproduces the
+        target token exactly. Rows draft only up to their budget
+        ``k_rows[r] = min(spec_k, remaining - 1)`` (the verify's bonus
+        token is the +1); beyond it their ``q_lens`` drops to 0 and their
+        writes route to the trash block.
+
+        Verify: ONE full-precision launch feeds ``[t0, d1..dk]`` per row
+        through :meth:`Model.verify_step`, scoring all ``k_max + 1``
+        positions and rewriting every draft-fed arena position at full
+        precision (which is the whole KV rollback story — see
+        kv_cache.py). Targets for all positions come from one flattened
+        ``sample_step``; row r accepts drafts while ``d[j] ==
+        target[j-1]`` and always emits at least target[0] — the token
+        plain decode would have produced, hence token-exactness for every
+        accept pattern.
+        """
+        m = self.metrics_registry
+        toks, idxs, steps, temps, keys = self.scheduler.decode_batch(
+            self._dummy_key)
+        decoding = self.scheduler.decoding_slots()
+        n = self.n_slots
+        k_rows = np.zeros(n, np.int32)
+        for s in decoding:
+            st = self.scheduler.slots[s]
+            k_rows[s] = min(self.spec_k, st.req.n_tokens - st.n_gen - 1)
+        k_max = int(k_rows.max(initial=0))
+        if k_max == 0:
+            # every live row is one token from its budget: speculation
+            # degenerates to plain decode, so run exactly that
+            self._decode_once()
+            return
+        live = [(s, self.scheduler.slots[s].req.rid, int(steps[s]))
+                for s in decoding] if self.tracer.enabled else []
+        tables = self.cache.tables_device()
+        keys_dev = jnp.stack(keys)
+        zeros = jnp.zeros(n, jnp.int32)
+        draft_toks = np.zeros((n, k_max), np.int32)
+        cur = toks
+        m.counter("spec.steps").inc()
+        with m.timer("spec.draft_s"):
+            for j in range(k_max):
+                q1 = (k_rows > j).astype(np.int32)
+                m.counter("step.model_dispatches").inc()
+                logits, tree = self._draft(
+                    self.params, {"tokens": jnp.asarray(cur)[:, None]},
+                    self.cache.tree, jnp.asarray(idxs + j),
+                    jnp.asarray(q1), zeros, tables)
+                self.cache.tree = tree
+                d = np.asarray(sample_step(logits, keys_dev,
+                                           jnp.asarray(steps + j),
+                                           jnp.asarray(temps)))
+                draft_toks[:, j] = d
+                cur = d
+        s_v = k_max + 1
+        btoks = np.zeros((n, s_v), np.int32)
+        btoks[:, 0] = toks
+        btoks[:, 1:] = draft_toks
+        q_lens = np.zeros(n, np.int32)
+        for s in decoding:
+            q_lens[s] = k_rows[s] + 1
+        m.counter("step.model_dispatches").inc()
+        with m.timer("spec.verify_s"):
+            logits, tree = self._verify(
+                self.params, {"tokens": jnp.asarray(btoks)},
+                self.cache.tree, jnp.asarray(idxs), jnp.asarray(q_lens),
+                tables)
+            self.cache.tree = tree
+        if m.enabled:
+            with m.timer("step.device_sync_s"):
+                jax.block_until_ready(logits)
+        with m.timer("step.sample_host_s"):
+            # one flattened sample over all (row, position) pairs: entry
+            # (r, j) draws with (keys[r], steps[r] + j) — exactly the
+            # (key, step) plain decode would use for that token index
+            flat_keys = jnp.stack([k for k in keys for _ in range(s_v)])
+            flat_steps = (steps[:, None]
+                          + np.arange(s_v, dtype=np.int32)[None, :])
+            targets = np.asarray(sample_step(
+                logits.reshape(n * s_v, -1), flat_keys,
+                jnp.asarray(flat_steps.reshape(-1)),
+                jnp.asarray(np.repeat(temps, s_v)))).reshape(n, s_v)
+        accepted: Dict[int, np.ndarray] = {}
+        for s in decoding:
+            k_r = int(k_rows[s])
+            a = 0
+            while a < k_r and draft_toks[s, a] == targets[s, a]:
+                a += 1
+            accepted[s] = targets[s, :a + 1]
+        m.counter("spec.proposed").inc(int(k_rows.sum()))
+        m.counter("spec.accepted").inc(
+            sum(len(v) - 1 for v in accepted.values()))
+        m.counter("spec.tokens").inc(
+            sum(len(v) for v in accepted.values()))
+        self.scheduler.record_spec(accepted)
+        for slot, rid, step in live:
+            got = len(accepted[slot])
+            self.tracer.event(tr.SPEC_ACCEPT, rid, slot=slot,
+                              proposed=int(k_rows[slot]),
+                              accepted=got - 1, tokens=got)
+            for j in range(got):
+                self.tracer.event(tr.DECODE_STEP, rid, slot=slot,
+                                  step=step + j)
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,21 @@ Either way each slot carries its own position plane and the attention mask
 only admits entries whose ``pos`` is valid (>= 0) — that masking contract
 is unchanged and is what isolates slots from each other, from stale
 entries, and from unwritten block tails.
+
+Speculative commit/rollback contract (``spec_decode``): speculative draft
+and verify launches write K/V for proposed tokens into the slot's OWNED
+blocks at positions ``[idx, idx + k]`` before knowing which proposals
+survive. No explicit rollback is needed, by three standing invariants:
+(1) rejected positions sit strictly beyond every later query position
+until the next feed window rewrites them, so the causal mask (kv pos <=
+q pos) keeps them unread; (2) the engine's per-row draft budget
+(``min(spec_k, remaining - 1)``) keeps every speculative write inside the
+blocks the slot already owns — never a shared prefix block, never past
+``eff_len``; (3) trie commits happen only at release, covering full
+blocks of the *fed* token sequence, by which point every committed
+position has been rewritten at full precision by the verify launch that
+accepted it. Rows sitting out a launch carry ``q_lens = 0`` and route to
+the trash block like any other masked write.
 """
 from __future__ import annotations
 

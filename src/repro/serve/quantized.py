@@ -137,6 +137,29 @@ def pack_placeholders(tree, qcfg: QuantConfig):
     return walk((), tree)
 
 
+def total_slices(tree) -> int:
+    """Number of SWIS bit-slices (mask planes) in a packed tree, from the
+    first packed leaf (``pack_tree`` packs every leaf with one config, so
+    the count is uniform). 0 when the tree holds no packed leaves — the
+    engine uses this to validate ``draft_slices`` for speculative decode.
+    """
+    found = 0
+
+    def walk(node):
+        nonlocal found
+        if found:
+            return
+        if is_packed(node):
+            found = int(node["mask_planes"].shape[-3])
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+
+    walk(tree)
+    return found
+
+
 def packed_stats(tree) -> Dict[str, int]:
     n = 0
 

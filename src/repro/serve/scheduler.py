@@ -219,6 +219,26 @@ class RequestScheduler:
                 self._finish(slot)
         self._decoding = []
 
+    def record_spec(self, accepted: Dict[int, np.ndarray]) -> None:
+        """Multi-token variant of :meth:`record_decode` for speculative
+        steps: each slot the last ``decode_batch`` marked live appends its
+        accepted tokens (longest matching draft prefix + the verify's
+        bonus token — at least one). The engine's per-row draft budget
+        guarantees acceptance never overruns the token budget; the assert
+        pins that contract."""
+        for slot in self._decoding:
+            st = self.slots[slot]
+            toks = accepted[slot]
+            assert 1 <= len(toks) <= st.req.n_tokens - st.n_gen, (
+                len(toks), st.n_gen, st.req.n_tokens)
+            for t in toks:
+                st.n_gen += 1
+                st.last_tok = int(t)
+                st.tokens.append(int(t))
+            if st.n_gen >= st.req.n_tokens:
+                self._finish(slot)
+        self._decoding = []
+
     # ------------------------------------------------------------------
     # Completion
     # ------------------------------------------------------------------

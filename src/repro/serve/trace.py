@@ -41,10 +41,14 @@ PREFIX_HIT = "prefix_hit"
 PREFILL_CHUNK = "prefill_chunk"
 FIRST_TOKEN = "first_token"
 DECODE_STEP = "decode_step"
+# speculative decode: one event per speculating slot per spec step, with
+# proposed / accepted draft counts (decode_step events are still emitted
+# per accepted token, so TTFT/TPOT derivations are spec-agnostic)
+SPEC_ACCEPT = "spec_accept"
 FINISH = "finish"
 
 KINDS = (SUBMIT, ADMIT, UNADMIT, PREFIX_HIT, PREFILL_CHUNK, FIRST_TOKEN,
-         DECODE_STEP, FINISH)
+         DECODE_STEP, SPEC_ACCEPT, FINISH)
 
 
 @dataclasses.dataclass

@@ -15,6 +15,7 @@ import pytest
 
 import repro.configs as C
 import repro.serve.trace as tr
+from conftest import requires_hypothesis
 from repro.models import params as pp
 from repro.models.model import Model
 from repro.serve import (ContinuousBatchingEngine, EngineConfig,
@@ -213,12 +214,14 @@ def test_fused_geometry_sweep(prefill_chunk, block_size, prompt_len):
     _parity_one(prefill_chunk, block_size, prompt_len)
 
 
+@pytest.mark.slow
+@requires_hypothesis()
 def test_fused_geometry_sweep_hypothesis():
     """Property form of the sweep when hypothesis is installed: any
     (prefill_chunk, block_size, prompt_len) with chunk a block multiple
     must be fused/separate token-exact."""
-    hyp = pytest.importorskip("hypothesis")
-    st = pytest.importorskip("hypothesis.strategies")
+    import hypothesis as hyp
+    from hypothesis import strategies as st
 
     @hyp.settings(max_examples=5, deadline=None,
                   suppress_health_check=list(hyp.HealthCheck))

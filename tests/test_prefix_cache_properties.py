@@ -1,11 +1,13 @@
 """Hypothesis property tests for the radix prefix cache (block pool +
 trie): insert/match/evict invariants under random request lifecycles.
-Module-level importorskip keeps tier-1 collection green without
-hypothesis; the deterministic invariant tests live in
-``tests/test_prefix_cache.py``."""
+The ``requires_hypothesis`` marker keeps tier-1 collection green (and
+import-free) without hypothesis; the deterministic invariant tests live
+in ``tests/test_prefix_cache.py`` and the speculative-decode rollback
+machine in ``tests/test_rollback_invariants.py``."""
 import numpy as np
 import pytest
 
+from conftest import requires_hypothesis
 from repro.serve import BlockPool, RadixPrefixCache
 
 BS = 8
@@ -15,67 +17,74 @@ def _toks(rng, n):
     return rng.integers(0, 512, (n,)).astype(np.int32)
 
 
-hyp = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
-
-@settings(max_examples=30, deadline=None)
-@given(st.data())
-def test_random_walk_invariants(data):
+@pytest.mark.slow
+@requires_hypothesis()
+def test_random_walk_invariants():
     """Random interleavings of request lifecycles + evictions: a matched
     chain is always a root-linked committed chain whose node chunks equal
     the query's token blocks (and was committed by some earlier finish),
     refcounts stay consistent, and the free list never intersects live
     references."""
-    pool = BlockPool(24, BS)
-    trie = RadixPrefixCache(pool)
-    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
-    ever_committed = set()  # append-only: chunk-chain keys any finish made
-    finished_seqs = []  # to derive shared-prefix queries from
-    live = []  # (block_ids, seq) held by in-flight "requests"
-    for _ in range(data.draw(st.integers(5, 40))):
-        op = data.draw(st.sampled_from(["admit", "finish", "evict"]))
-        if op == "admit":
-            seq = _toks(rng, data.draw(st.integers(1, 3)) * BS)
-            if data.draw(st.booleans()) and finished_seqs:
-                # extend a previously-finished sequence to force hits
-                base = finished_seqs[rng.integers(len(finished_seqs))]
-                seq = np.concatenate([base, seq])[: 3 * BS]
-            matched = trie.match(seq)
-            # invariants: the matched chain is committed, root-linked, and
-            # keyed by exactly this query's token blocks
-            parent = trie._root
-            for j, blk in enumerate(matched):
-                node = trie._node_of_block[blk]
-                assert node.chunk == seq[j * BS: (j + 1) * BS].tobytes()
-                assert node.parent is parent
-                assert seq[: (j + 1) * BS].tobytes() in ever_committed
-                parent = node
-            pool.incref(matched)
-            own = len(seq) // BS - len(matched)
-            if pool.n_free() < own:
-                trie.evict(own - pool.n_free())
-            ids = pool.alloc(own)
-            if ids is None:
-                trie.release(matched)
-                continue
-            pool.incref(ids)
-            live.append((matched + ids, seq))
-        elif op == "finish" and live:
-            blocks, seq = live.pop(rng.integers(len(live)))
-            trie.commit(seq, blocks)
-            for j in range(len(blocks)):
-                ever_committed.add(seq[: (j + 1) * BS].tobytes())
-            finished_seqs.append(seq)
-            trie.release(blocks)
-        else:
+    import hypothesis as hyp
+    from hypothesis import strategies as st
+
+    @hyp.settings(max_examples=30, deadline=None)
+    @hyp.given(st.data())
+    def prop(data):
+        pool = BlockPool(24, BS)
+        trie = RadixPrefixCache(pool)
+        rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+        ever_committed = set()  # append-only: chunk-chain keys any finish made
+        finished_seqs = []  # to derive shared-prefix queries from
+        live = []  # (block_ids, seq) held by in-flight "requests"
+        for _ in range(data.draw(st.integers(5, 40))):
+            op = data.draw(st.sampled_from(["admit", "finish", "evict"]))
+            if op == "admit":
+                seq = _toks(rng, data.draw(st.integers(1, 3)) * BS)
+                if data.draw(st.booleans()) and finished_seqs:
+                    # extend a previously-finished sequence to force hits
+                    base = finished_seqs[rng.integers(len(finished_seqs))]
+                    seq = np.concatenate([base, seq])[: 3 * BS]
+                matched = trie.match(seq)
+                # invariants: the matched chain is committed, root-linked,
+                # and keyed by exactly this query's token blocks
+                parent = trie._root
+                for j, blk in enumerate(matched):
+                    node = trie._node_of_block[blk]
+                    assert node.chunk == seq[j * BS: (j + 1) * BS].tobytes()
+                    assert node.parent is parent
+                    assert seq[: (j + 1) * BS].tobytes() in ever_committed
+                    parent = node
+                pool.incref(matched)
+                own = len(seq) // BS - len(matched)
+                if pool.n_free() < own:
+                    trie.evict(own - pool.n_free())
+                ids = pool.alloc(own)
+                if ids is None:
+                    trie.release(matched)
+                    continue
+                pool.incref(ids)
+                live.append((matched + ids, seq))
+            elif op == "finish" and live:
+                blocks, seq = live.pop(rng.integers(len(live)))
+                trie.commit(seq, blocks)
+                for j in range(len(blocks)):
+                    ever_committed.add(seq[: (j + 1) * BS].tobytes())
+                finished_seqs.append(seq)
+                trie.release(blocks)
+            else:
+                referenced = {b for blocks, _ in live for b in blocks}
+                trie.evict(data.draw(st.integers(1, 4)))
+                # eviction never drops a referenced block
+                assert not referenced & set(pool._free)
+            # global invariants
             referenced = {b for blocks, _ in live for b in blocks}
-            trie.evict(data.draw(st.integers(1, 4)))
-            # eviction never drops a referenced block
             assert not referenced & set(pool._free)
-        # global invariants
-        assert (pool.refcount >= 0).all()
-        referenced = {b for blocks, _ in live for b in blocks}
-        assert not referenced & set(pool._free)
-        assert not set(trie._node_of_block) & set(pool._free)
-        assert pool.refcount[0] == 0 and 0 not in pool._free  # trash block
+            assert not set(trie._node_of_block) & set(pool._free)
+            # trash block 0: refcount pinned to 1, never on the free list,
+            # never committed to the trie
+            assert (pool.refcount[1:] >= 0).all()
+            assert pool.refcount[0] == 1 and 0 not in pool._free
+            assert 0 not in trie._node_of_block
+
+    prop()

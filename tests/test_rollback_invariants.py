@@ -1,0 +1,299 @@
+"""Rollback invariants for the block arena under speculative decode.
+
+Extends the PR-4 unadmit leak test (``test_prefix_cache.py::
+test_unadmit_under_pool_pressure_leaks_no_refcounts``) into a rule-based
+state machine: after ANY sequence of admissions (with prefix hits),
+speculative accept/reject rounds, unadmits, finishes, and evictions, the
+:class:`BlockPool` + :class:`RadixPrefixCache` pair must satisfy
+
+  * free ∪ slot-referenced ∪ committed == all non-reserved blocks (no
+    leaked block is ever stranded outside all three sets);
+  * the trash block 0 keeps refcount 1, never enters the free list and
+    is never committed;
+  * no slot table references a freed block, and every block's refcount
+    equals the number of slot tables holding it.
+
+The harness mirrors the engine's block accounting contract
+(kv_cache.py "Speculative commit/rollback contract"): rejected drafts
+need no block-level rollback — a spec round only ever *feeds* accepted
+tokens, allocates lazily at block boundaries, and finish commits only
+the full blocks of fed tokens. The hypothesis machine is the slow-tier
+sweep; the seeded random walk is its deterministic tier-1 fallback, and
+an engine-level test pins the same quiescence on the real serve stack
+after speculative serving with truncated (rejection-heavy) drafts.
+"""
+import collections
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from conftest import requires_hypothesis
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import (BlockPool, ContinuousBatchingEngine, EngineConfig,
+                         RadixPrefixCache, SamplingParams)
+
+BS = 4
+N_BLOCKS = 16
+
+
+class _Arena:
+    """Host-side mirror of the engine's per-slot block accounting: the
+    same BlockPool/RadixPrefixCache calls the engine makes, minus the
+    device arena (the K/V payload is irrelevant to the invariants)."""
+
+    def __init__(self, n_blocks=N_BLOCKS, bs=BS):
+        self.bs = bs
+        self.pool = BlockPool(n_blocks, bs)
+        self.trie = RadixPrefixCache(self.pool)
+        self.slots = {}  # slot -> {"blocks": [ids], "seq": fed tokens}
+        self._next_slot = 0
+
+    def _blocks_for(self, n_tokens):
+        return -(-n_tokens // self.bs)
+
+    def _grow(self, state, n_new):
+        """Lazily allocate blocks to cover ``n_new`` more fed tokens
+        (evicting if needed). Returns the token count actually coverable
+        — the engine's per-row budget clamp in miniature."""
+        while n_new:
+            need = (self._blocks_for(len(state["seq"]) + n_new)
+                    - len(state["blocks"]))
+            if need <= 0:
+                return n_new
+            if self.pool.n_free() < need:
+                self.trie.evict(need - self.pool.n_free())
+            ids = self.pool.alloc(need)
+            if ids is not None:
+                self.pool.incref(ids)
+                state["blocks"] += ids
+                return n_new
+            n_new -= 1  # arena exhausted: feed fewer tokens this round
+        return 0
+
+    # -- engine-contract operations ------------------------------------
+
+    def admit(self, prompt):
+        """Prefix-match + incref the hit chain, allocate the uncovered
+        prompt blocks; on pool starvation roll the speculative
+        references back (scheduler.unadmit + prefix_cache.release)."""
+        matched = self.trie.match(prompt)
+        self.pool.incref(matched)
+        own = self._blocks_for(len(prompt)) - len(matched)
+        if self.pool.n_free() < own:
+            self.trie.evict(own - self.pool.n_free())
+        ids = self.pool.alloc(own)
+        if ids is None:
+            self.trie.release(matched)  # the unadmit rollback
+            return None
+        self.pool.incref(ids)
+        slot = self._next_slot
+        self._next_slot += 1
+        self.slots[slot] = {"blocks": matched + ids,
+                            "seq": np.asarray(prompt, np.int32)}
+        return slot
+
+    def spec_round(self, slot, rng, proposed, accepted):
+        """One speculative round: ``accepted <= proposed`` drafts matched
+        the verify targets, and the bonus token always lands — so
+        ``accepted + 1`` tokens are fed. Rejected drafts touch no block
+        state at all (their writes are overwritten before commit)."""
+        state = self.slots[slot]
+        emit = self._grow(state, min(accepted, proposed) + 1)
+        toks = rng.integers(0, 512, (emit,)).astype(np.int32)
+        state["seq"] = np.concatenate([state["seq"], toks])
+
+    def unadmit(self, slot):
+        """Failed admission rollback: every reference taken at admit is
+        dropped; own (uncommitted) blocks go straight back to the free
+        list."""
+        state = self.slots.pop(slot)
+        self.trie.release(state["blocks"])
+
+    def finish(self, slot):
+        """Commit the full blocks of the fed sequence minus the last
+        token (the engine's ``seq = prompt + tokens[:-1]``), then release
+        the slot's references."""
+        state = self.slots.pop(slot)
+        seq = state["seq"][:-1]
+        self.trie.commit(seq, state["blocks"][:len(seq) // self.bs])
+        self.trie.release(state["blocks"])
+
+    # -- the invariants -------------------------------------------------
+
+    def check(self):
+        pool, trie = self.pool, self.trie
+        free = set(pool._free)
+        committed = set(trie._node_of_block)
+        held = collections.Counter(
+            b for s in self.slots.values() for b in s["blocks"])
+        # trash block 0: refcount pinned, never free, never committed
+        assert pool.refcount[0] == 1
+        assert 0 not in free and 0 not in committed
+        # no slot table references a freed block
+        assert not set(held) & free
+        assert not committed & free
+        # coverage: free ∪ live == all non-reserved blocks (a block
+        # outside all three sets is leaked forever)
+        assert free | set(held) | committed == set(range(1, pool.n_blocks))
+        # refcount == number of slot tables holding the block, exactly
+        for b in range(1, pool.n_blocks):
+            assert pool.refcount[b] == held.get(b, 0), (b, held.get(b, 0))
+
+
+def _random_walk(seed, n_ops=120):
+    rng = np.random.default_rng(seed)
+    arena = _Arena()
+    finished_seqs = []
+    for _ in range(n_ops):
+        op = rng.choice(["admit", "spec", "unadmit", "finish", "evict"],
+                        p=[0.3, 0.3, 0.1, 0.2, 0.1])
+        if op == "admit" and len(arena.slots) < 4:
+            prompt = rng.integers(0, 512, (int(rng.integers(1, 10)),))
+            if finished_seqs and rng.random() < 0.5:
+                # replay a finished prefix so admissions hit the trie
+                base = finished_seqs[rng.integers(len(finished_seqs))]
+                prompt = np.concatenate([base[:rng.integers(1, len(base)
+                                                            + 1)], prompt])
+            arena.admit(prompt.astype(np.int32))
+        elif op == "spec" and arena.slots:
+            slot = list(arena.slots)[rng.integers(len(arena.slots))]
+            proposed = int(rng.integers(1, 5))
+            arena.spec_round(slot, rng, proposed,
+                             int(rng.integers(0, proposed + 1)))
+        elif op == "unadmit" and arena.slots:
+            slot = list(arena.slots)[rng.integers(len(arena.slots))]
+            arena.unadmit(slot)
+        elif op == "finish" and arena.slots:
+            slot = list(arena.slots)[rng.integers(len(arena.slots))]
+            if len(arena.slots[slot]["seq"]) > 1:
+                finished_seqs.append(arena.slots[slot]["seq"])
+                arena.finish(slot)
+        elif op == "evict":
+            arena.trie.evict(int(rng.integers(1, 4)))
+        arena.check()
+    # quiesce: every in-flight slot finishes, nothing may stay stranded
+    for slot in list(arena.slots):
+        if len(arena.slots[slot]["seq"]) > 1:
+            arena.finish(slot)
+        else:
+            arena.unadmit(slot)
+    arena.check()
+    assert (arena.pool.refcount[1:] == 0).all()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_rollback_random_walk(seed):
+    """Deterministic tier-1 fallback for the hypothesis machine below:
+    seeded random interleavings of the same rule set, invariants checked
+    after every operation and after full quiescence."""
+    _random_walk(seed)
+
+
+@pytest.mark.slow
+@requires_hypothesis()
+def test_rollback_state_machine():
+    """Rule-based form: hypothesis drives arbitrary interleavings of
+    admit / spec accept-reject / unadmit / finish / evict and shrinks
+    any violating sequence to a minimal reproduction."""
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                     precondition, rule,
+                                     run_state_machine_as_test)
+
+    class Machine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.arena = _Arena()
+            self.rng = np.random.default_rng(0)
+            self.finished_seqs = []
+
+        @rule(n_toks=st.integers(1, 12), reuse=st.booleans())
+        def admit(self, n_toks, reuse):
+            prompt = self.rng.integers(0, 512, (n_toks,)).astype(np.int32)
+            if reuse and self.finished_seqs:
+                base = self.finished_seqs[
+                    self.rng.integers(len(self.finished_seqs))]
+                prompt = np.concatenate([base, prompt])[:3 * BS]
+            self.arena.admit(prompt)
+
+        @precondition(lambda self: self.arena.slots)
+        @rule(proposed=st.integers(1, 4), data=st.data())
+        def spec_round(self, proposed, data):
+            slot = data.draw(st.sampled_from(sorted(self.arena.slots)))
+            accepted = data.draw(st.integers(0, proposed))
+            self.arena.spec_round(slot, self.rng, proposed, accepted)
+
+        @precondition(lambda self: self.arena.slots)
+        @rule(data=st.data())
+        def unadmit(self, data):
+            self.arena.unadmit(
+                data.draw(st.sampled_from(sorted(self.arena.slots))))
+
+        @precondition(lambda self: any(
+            len(s["seq"]) > 1 for s in self.arena.slots.values()))
+        @rule(data=st.data())
+        def finish(self, data):
+            slot = data.draw(st.sampled_from(sorted(
+                s for s, v in self.arena.slots.items()
+                if len(v["seq"]) > 1)))
+            self.finished_seqs.append(self.arena.slots[slot]["seq"])
+            self.arena.finish(slot)
+
+        @rule(n=st.integers(1, 4))
+        def evict(self, n):
+            self.arena.trie.evict(n)
+
+        @invariant()
+        def invariants_hold(self):
+            self.arena.check()
+
+    run_state_machine_as_test(
+        Machine, settings=settings(max_examples=25, stateful_step_count=40,
+                                   deadline=None))
+
+
+# -- the same quiescence on the real engine, speculating ----------------
+
+
+MAX_LEN = 64
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    cfg = C.get_smoke("smollm-135m").replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    return cfg, params
+
+
+def test_spec_serving_leaves_pool_quiescent(rng):
+    """After speculative serving with a truncated (rejection-heavy)
+    draft, shared prefixes and eviction pressure: draining the engine
+    leaves every non-reserved block either free or committed-unreferenced
+    — the engine-level face of the state machine's invariants."""
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(
+        cfg, params, config=EngineConfig(
+            max_len=MAX_LEN, n_slots=2, block_size=BS, n_cache_blocks=4,
+            spec_decode=True, spec_k=3, packed=True, draft_slices=2))
+    shared = rng.integers(0, cfg.vocab, (2 * BS,)).astype(np.int32)
+    for i in range(5):
+        tail = rng.integers(0, cfg.vocab,
+                            (int(rng.integers(3, 12)),)).astype(np.int32)
+        eng.submit(np.concatenate([shared, tail]) if i % 2 else tail,
+                   SamplingParams(max_tokens=6, temperature=0.6, seed=i))
+    eng.drain()
+    counters = eng.metrics_registry.snapshot()["counters"]
+    assert counters["spec.proposed"] > 0  # speculation actually ran
+    pool = eng.prefix_cache.pool
+    assert pool.refcount[0] == 1  # trash block stays pinned
+    np.testing.assert_array_equal(pool.refcount[1:], 0)
+    committed = {b for b in range(1, pool.n_blocks)
+                 if eng.prefix_cache.is_committed(b)}
+    free = set(pool._free)
+    assert free.isdisjoint(committed)
+    assert free | committed == set(range(1, pool.n_blocks))

@@ -1,0 +1,383 @@
+"""Self-speculative multi-token decode: a truncated-bit-slice draft pass
+proposes up to ``spec_k`` tokens per step and ONE full-precision verify
+launch scores them all — and that speculation must be invisible in the
+output. Every request's token stream matches plain (non-speculative)
+decode exactly, for EVERY accept pattern: staggered arrivals, seeded
+temperature sampling, prefix-cache hits, chunked-prefill overlap (fused
+and separate), both paged-attention impls, and truncated drafts that
+actually get rejected. The counter/trace tests pin the mechanism:
+``draft_slices == total_slices`` means the draft IS the target model, so
+the accept rate is exactly 1.0; a spec step issues ``k_max + 1`` model
+dispatches (k_max drafts + one verify)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+import repro.serve.trace as tr
+from conftest import requires_hypothesis
+from repro.core import packing, swis
+from repro.kernels import ops, ref
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import (ContinuousBatchingEngine, EngineConfig,
+                         SamplingParams)
+from repro.serve.quantized import total_slices
+
+MAX_LEN = 96
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    cfg = C.get_smoke("smollm-135m").replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    return cfg, params
+
+
+def _prompt(rng, s0):
+    cfg, _ = _setup()
+    return rng.integers(0, cfg.vocab, (s0,)).astype(np.int32)
+
+
+def _engine(spec, **kw):
+    cfg, params = _setup()
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("n_slots", 3)
+    if spec:
+        kw.setdefault("spec_k", 3)
+    return ContinuousBatchingEngine(
+        cfg, params, config=EngineConfig(spec_decode=spec, **kw))
+
+
+def _drain_ordered(eng, rids):
+    out = eng.drain()
+    return [out[r] for r in rids]
+
+
+# -- token-exact parity vs plain decode ---------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_spec_matches_plain_staggered(rng, temperature):
+    """Staggered arrivals + seeded sampling: every request's full token
+    stream is identical with speculation on vs off. Mixed budgets force
+    every per-row draft budget (k_rows) pattern: full spec_k, clamped
+    tail (remaining-1 < spec_k), and the k_max == 0 plain-decode
+    degeneration on the last token."""
+    prompts = [_prompt(rng, s0) for s0 in (17, 5, 9, 12)]
+    budgets = [8, 3, 1, 6]
+
+    def run(spec):
+        eng = _engine(spec)
+        out = {}
+        rids = [eng.submit(p, SamplingParams(max_tokens=budgets[i],
+                                             temperature=temperature,
+                                             seed=i))
+                for i, p in enumerate(prompts[:2])]
+        for _ in range(2):
+            for f in eng.step():
+                out[f.rid] = np.concatenate([f.prompt, f.tokens])
+        rids += [eng.submit(p, SamplingParams(max_tokens=budgets[2 + i],
+                                              temperature=temperature,
+                                              seed=2 + i))
+                 for i, p in enumerate(prompts[2:])]
+        out.update(eng.drain())
+        return [out[r] for r in rids]
+
+    for got, want in zip(run(True), run(False)):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_spec_matches_plain_with_prefix_hits(rng):
+    """Requests sharing a 24-token prefix: the speculative run must hit
+    the prefix cache (committed blocks are full-precision by the verify
+    rewrite) and reproduce the plain-path tokens exactly."""
+    shared = _prompt(rng, 24)
+    prompts = [np.concatenate([shared, _prompt(rng, t)]) for t in (9, 4)]
+
+    def run(spec):
+        eng = _engine(spec, n_slots=2)
+        outs = []
+        for i, p in enumerate(prompts):
+            rid = eng.submit(p, SamplingParams(max_tokens=6, seed=i))
+            outs.append(eng.drain()[rid])  # drain so blocks commit
+        assert eng.prefix_stats()["hit_rate"] > 0
+        return outs
+
+    for got, want in zip(run(True), run(False)):
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_spec_matches_plain_chunked_prefill_overlap(rng, fused):
+    """A long prompt prefilling chunk-by-chunk while another slot decodes
+    speculatively around it: chunk-servicing steps take the (fused or
+    separate) prefill path and pure-decode steps speculate, with
+    token-exact output either way."""
+    short, long = _prompt(rng, 5), _prompt(rng, 50)
+
+    def run(spec):
+        eng = _engine(spec, n_slots=2, prefill_chunk=16, fused_step=fused)
+        r0 = eng.submit(short, SamplingParams(max_tokens=10, seed=0))
+        eng.step()  # short request is now DECODING
+        r1 = eng.submit(long, SamplingParams(max_tokens=4, seed=1))
+        return _drain_ordered(eng, [r0, r1])
+
+    for got, want in zip(run(True), run(False)):
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("paged_impl", ["xla", "pallas_interpret"])
+def test_spec_matches_plain_paged(rng, paged_impl):
+    """Draft and verify both route per-row token counts through the
+    paged kernel's scalar-prefetched q_lens: tokens must match plain
+    decode under the same impl."""
+    prompts = [_prompt(rng, 11), _prompt(rng, 6)]
+    n_tok = 3 if paged_impl == "pallas_interpret" else 6
+    spec_k = 2 if paged_impl == "pallas_interpret" else 3
+
+    def run(spec):
+        eng = _engine(spec, n_slots=2, spec_k=spec_k,
+                      use_paged_kernel=True, paged_impl=paged_impl)
+        rids = [eng.submit(p, SamplingParams(max_tokens=n_tok, seed=i))
+                for i, p in enumerate(prompts)]
+        return _drain_ordered(eng, rids)
+
+    for got, want in zip(run(True), run(False)):
+        np.testing.assert_array_equal(got, want)
+
+
+# -- truncated drafts: packed path, rejections, accept-rate bound -------
+
+
+def _spec_counters(eng):
+    return eng.metrics_registry.snapshot()["counters"]
+
+
+def test_spec_truncated_draft_parity_packed(rng):
+    """draft_slices < total_slices: the draft model really is lossy (it
+    proposes from truncated weights and gets drafts rejected), yet the
+    output still matches the packed plain-decode stream token-exactly —
+    the verify pass, not the draft, decides every emitted token."""
+    prompts = [_prompt(rng, 13), _prompt(rng, 7)]
+
+    def run(spec, **kw):
+        eng = _engine(spec, n_slots=2, packed=True, **kw)
+        rids = [eng.submit(p, SamplingParams(max_tokens=8, temperature=0.7,
+                                             seed=i))
+                for i, p in enumerate(prompts)]
+        outs = _drain_ordered(eng, rids)
+        return outs, _spec_counters(eng)
+
+    want, _ = run(False)
+    got, counters = run(True, draft_slices=2)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+    assert counters["spec.proposed"] > 0
+    assert counters["spec.accepted"] <= counters["spec.proposed"]
+    # every live row emits its bonus token even when all drafts miss
+    assert counters["spec.tokens"] > counters["spec.accepted"]
+
+
+def test_spec_accept_rate_one_at_full_slices(rng):
+    """draft_slices == total_slices means draft logits ARE the verify
+    logits (same packed weights, same (key, step) sampler), so every
+    proposed draft is accepted: accept rate exactly 1.0."""
+    probe = _engine(False, packed=True)
+    total = total_slices(probe.params)
+    assert total >= 1  # packed tree must expose its slice count
+    del probe
+
+    eng = _engine(True, n_slots=2, packed=True, draft_slices=total)
+    for i, s0 in enumerate((10, 6)):
+        eng.submit(_prompt(rng, s0),
+                   SamplingParams(max_tokens=7, temperature=0.5, seed=i))
+    eng.drain()
+    counters = _spec_counters(eng)
+    assert counters["spec.proposed"] > 0
+    assert counters["spec.accepted"] == counters["spec.proposed"]
+
+
+def test_draft_slices_out_of_range_rejected(rng):
+    """The engine validates draft_slices against the packed tree's
+    actual slice count at construction, not steps into serving."""
+    probe = _engine(False, packed=True)
+    total = total_slices(probe.params)
+    with pytest.raises(ValueError, match="draft_slices"):
+        _engine(True, packed=True, draft_slices=total + 1)
+
+
+# -- dispatch counts + trace events -------------------------------------
+
+
+def test_spec_step_dispatch_count_and_trace(rng):
+    """A speculative step issues exactly k_max + 1 model dispatches
+    (k_max S=1 drafts + ONE verify over all k_max+1 positions) and emits
+    one SPEC_ACCEPT event per live slot plus one DECODE_STEP per
+    accepted token — so TTFT/TPOT derivations stay spec-agnostic."""
+    eng = _engine(True, n_slots=2, spec_k=3)
+    rid = eng.submit(_prompt(rng, 8), SamplingParams(max_tokens=9, seed=0))
+    eng.step()  # prefill + first token
+    c = eng.metrics_registry.counter("step.model_dispatches")
+
+    st = eng.scheduler.slots[0]
+    done = []
+    while st.n_gen < st.req.n_tokens:
+        remaining = st.req.n_tokens - st.n_gen
+        k_max = min(3, remaining - 1)
+        n_ev = len(eng.tracer)
+        before = c.value
+        done += list(eng.step())
+        new = eng.tracer.events()[n_ev:]
+        if k_max == 0:
+            # last token: speculation degenerates to plain decode
+            assert c.value - before == 1
+            assert not [e for e in new if e.kind == tr.SPEC_ACCEPT]
+            continue
+        assert c.value - before == k_max + 1
+        (acc,) = [e for e in new if e.kind == tr.SPEC_ACCEPT]
+        assert acc.fields["proposed"] == k_max
+        n_decode = len([e for e in new if e.kind == tr.DECODE_STEP])
+        assert n_decode == acc.fields["tokens"] == acc.fields["accepted"] + 1
+
+    (out,) = done
+    assert out.rid == rid and len(out.tokens) == 9
+    stats = eng.tracer.request_stats(rid)
+    # decode_step continuity: every generated token after the first has
+    # exactly one decode_step event, whatever the accept pattern was
+    assert stats["n_decode_steps"] == 8
+    assert "tpot_s" in stats
+
+
+# -- geometry sweep: spec == plain across (spec_k, slices, block, len) --
+
+
+def _spec_parity_one(spec_k, draft_slices, block_size, prompt_len):
+    rng = np.random.default_rng(prompt_len * 37 + spec_k * 5 + block_size)
+    prompts = [_prompt(rng, prompt_len), _prompt(rng, 4)]
+
+    def run(spec):
+        eng = _engine(spec, n_slots=2, spec_k=spec_k, block_size=block_size,
+                      packed=True,
+                      draft_slices=draft_slices if spec else None)
+        rids = [eng.submit(p, SamplingParams(max_tokens=5, temperature=0.6,
+                                             seed=i))
+                for i, p in enumerate(prompts)]
+        return _drain_ordered(eng, rids)
+
+    for got, want in zip(run(True), run(False)):
+        np.testing.assert_array_equal(got, want)
+
+
+SWEEP = [(1, 1, 8, 9), (2, 2, 4, 13), (3, 3, 8, 21), (4, 2, 4, 6)]
+
+
+@pytest.mark.parametrize("spec_k,draft_slices,block_size,prompt_len", SWEEP)
+def test_spec_geometry_sweep(spec_k, draft_slices, block_size, prompt_len):
+    """Deterministic fallback for the hypothesis sweep below — runs
+    everywhere, covers spec_k from degenerate (1) past the budget (4 >
+    max_tokens-1), heavily truncated drafts, and both block sizes."""
+    _spec_parity_one(spec_k, draft_slices, block_size, prompt_len)
+
+
+@pytest.mark.slow
+@requires_hypothesis()
+def test_spec_geometry_sweep_hypothesis():
+    """Property form of the sweep when hypothesis is installed: any
+    (spec_k, draft_slices, block_size, prompt_len) must be speculative /
+    plain token-exact. draft_slices is drawn past the valid ceiling and
+    clamped so the sweep leans on the truncated region without assuming
+    the arch's slice count."""
+    import hypothesis as hyp
+    from hypothesis import strategies as st
+
+    probe = _engine(False, packed=True)
+    total = total_slices(probe.params)
+    del probe
+
+    @hyp.settings(max_examples=5, deadline=None,
+                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.given(spec_k=st.integers(min_value=1, max_value=4),
+               draft=st.integers(min_value=1, max_value=6),
+               block_size=st.sampled_from([4, 8]),
+               prompt_len=st.integers(min_value=2, max_value=32))
+    def prop(spec_k, draft, block_size, prompt_len):
+        _spec_parity_one(spec_k, min(draft, total), block_size, prompt_len)
+
+    prop()
+
+
+# -- kernel-level keep_slices semantics ---------------------------------
+
+
+@pytest.mark.parametrize("method", ["swis", "swis_c"])
+def test_keep_slices_kernel_semantics(rng, method):
+    """keep_slices truncates to the MOST significant planes (ascending
+    shift layout: the last k planes): keep == n_shifts reproduces the
+    full matmul bit-exactly, the dequant error decays monotonically as
+    slices are added back, and the Pallas kernel path agrees with the
+    jnp oracle at every truncation level."""
+    k, n, group, n_shifts = 128, 128, 4, 4
+    w = rng.normal(0, 0.05, (k, n)).astype(np.float32)
+    qw = swis.quantize(jnp.asarray(w),
+                       swis.QuantConfig(method=method, n_shifts=n_shifts,
+                                        group_size=group))
+    pw = packing.pack(qw)
+    x = jnp.asarray(rng.normal(0, 1, (8, k)).astype(np.float32))
+    consecutive = pw.method == "swis_c"
+
+    full = np.asarray(ref.swis_matmul_ref(
+        x, pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale,
+        group=group, consecutive=consecutive))
+    w_full = np.asarray(ref.dequant_ref(
+        pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale, group=group,
+        consecutive=consecutive))
+
+    errs = []
+    for keep in range(1, n_shifts + 1):
+        w_k = np.asarray(ref.dequant_ref(
+            pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale,
+            group=group, consecutive=consecutive, keep_slices=keep))
+        errs.append(np.abs(w_k - w_full).mean())
+        want = np.asarray(ref.swis_matmul_ref(
+            x, pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale,
+            group=group, consecutive=consecutive, keep_slices=keep))
+        got = np.asarray(ops.swis_matmul(x, pw, use_pallas=True,
+                                         interpret=True, keep_slices=keep))
+        np.testing.assert_allclose(got, want, rtol=1e-5,
+                                   atol=1e-5 * max(np.abs(want).max(), 1.0))
+    np.testing.assert_array_equal(
+        np.asarray(ops.swis_matmul(x, pw, keep_slices=n_shifts)), full)
+    assert errs[-1] == 0.0
+    assert all(a >= b for a, b in zip(errs, errs[1:]))  # monotone decay
+
+
+def test_keep_slices_validation(rng):
+    qw = swis.quantize(
+        jnp.asarray(rng.normal(0, 0.05, (64, 128)).astype(np.float32)),
+        swis.QuantConfig(n_shifts=3, group_size=4))
+    pw = packing.pack(qw)
+    x = jnp.ones((4, 64), jnp.float32)
+    for bad in (0, 4):
+        with pytest.raises(ValueError, match="keep_slices"):
+            ops.swis_matmul(x, pw, keep_slices=bad)
+
+
+def test_keep_slices_vjp_uses_truncated_weights(rng):
+    """The custom VJP backprops through the SAME truncated weights the
+    forward used — the draft model's gradient story stays consistent
+    with its forward (pinned here even though serving never uses it)."""
+    qw = swis.quantize(
+        jnp.asarray(rng.normal(0, 0.05, (128, 128)).astype(np.float32)),
+        swis.QuantConfig(n_shifts=4, group_size=4))
+    pw = packing.pack(qw)
+    x = jnp.asarray(rng.normal(0, 1, (4, 128)).astype(np.float32))
+    g = jax.grad(lambda xx: ops.swis_matmul(xx, pw, keep_slices=2).sum())(x)
+    w_t = np.asarray(ref.dequant_ref(
+        pw.sign_plane, pw.mask_planes, pw.shifts, pw.scale, group=4,
+        keep_slices=2))
+    np.testing.assert_allclose(np.asarray(g), np.ones((4, 128)) @ w_t.T,
+                               rtol=1e-4, atol=1e-4)
