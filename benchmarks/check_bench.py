@@ -38,12 +38,26 @@ any ``--workloads`` selection. Exits non-zero with a reason on failure.
 ``--require-metrics DIR`` additionally validates the observability
 artifacts ``serve_bench.py --artifacts-dir`` exported: for every workload
 in the report there must be a ``metrics_<workload>.json`` snapshot with
-the unified ``engine.metrics()`` sections and required keys, and a
-non-empty ``trace_<workload>.jsonl`` lifecycle trace. Failures name the
-workload and the missing key/file (actionable, not a bare assert).
+the unified ``engine.metrics()`` sections, required keys, and non-zero
+cost-model counters (``cost.flops`` / ``cost.hbm_bytes`` /
+``cost.swis_cycles``); a non-empty ``trace_<workload>.jsonl`` lifecycle
+trace; and a ``chrome_trace_<workload>.json`` that passes the Chrome
+trace-event schema smoke check (valid JSON, ``ph``/``ts``/``pid`` on
+every event, at least one ``step`` span with a phase span nested inside
+it). Failures name the workload and the missing key/file (actionable,
+not a bare assert).
+
+``--baseline PATH`` (the serve_bench ``--update-baseline`` file) turns an
+opaque perf regression into an attributed one: for every workload the
+baseline's per-phase p95s and cost counters are compared against the
+report, and a failure names *which phase* slowed down or *which cost
+counter* moved (tolerance ``--baseline-tolerance``, default 25%; cost
+counters are deterministic, so any relative drift beyond tolerance — in
+either direction — is flagged as an unacknowledged cost-model/dispatch
+change).
 
 Usage: python benchmarks/check_bench.py BENCH_serve.json [--min-speedup 2]
-           [--require-metrics artifacts/]
+           [--require-metrics artifacts/] [--baseline benchmarks/baseline.json]
 """
 from __future__ import annotations
 
@@ -62,6 +76,103 @@ REQUIRED_SCHEDULER_KEYS = ("queue_depth", "active_slots",
 REQUIRED_PREFIX_KEYS = ("enabled", "prefill_tokens", "saved_tokens")
 REQUIRED_POOL_KEYS = ("n_blocks", "free_blocks", "used_blocks",
                       "occupancy")
+# cost-model counters every instrumented run must have recorded (global
+# totals; per-kind cost.<kind>.* counters ride alongside)
+REQUIRED_COST_COUNTERS = ("cost.flops", "cost.hbm_bytes",
+                          "cost.swis_cycles")
+
+
+def check_chrome_trace(path):
+    """Schema smoke check over an exported Chrome trace-event JSON.
+    Returns a list of error strings (empty = passes): valid JSON with a
+    non-empty ``traceEvents`` list, ``ph``/``ts``/``pid`` on every
+    event, at least one ``X`` span named ``step``, and at least one
+    phase span nested inside a step span by timestamp containment —
+    the structure Perfetto renders as the step -> phase hierarchy."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable Chrome trace ({e})"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: traceEvents missing or empty"]
+    errors = []
+    for i, e in enumerate(events):
+        for key in ("ph", "ts", "pid"):
+            if key not in e:
+                errors.append(f"{path}: event {i} missing {key!r}")
+                break
+    spans = [e for e in events if e.get("ph") == "X"]
+    steps = [e for e in spans if e.get("name") == "step"]
+    if not steps:
+        errors.append(f"{path}: no 'step' span — phase spans have "
+                      f"nothing to nest under")
+        return errors
+    nested = False
+    for e in spans:
+        if e.get("name") == "step" or e.get("pid") != steps[0].get("pid"):
+            continue
+        for s in steps:
+            if (s["ts"] <= e["ts"]
+                    and e["ts"] + e.get("dur", 0)
+                    <= s["ts"] + s.get("dur", 0) + 1e-6):
+                nested = True
+                break
+        if nested:
+            break
+    if not nested:
+        errors.append(f"{path}: no phase span nested inside a step span "
+                      f"(timestamp containment) — the span hierarchy is "
+                      f"broken")
+    return errors
+
+
+def attribute_regressions(results, baseline, tolerance=0.25):
+    """Per-phase / per-cost-counter baseline comparison: the attribution
+    layer behind the one-number gate. Returns error strings naming the
+    workload AND the phase/counter that moved.
+
+    Phases (p95 seconds, baseline already carries 2x headroom): fail when
+    measured > baseline * (1 + tolerance). Cost counters (deterministic
+    model outputs): fail when relative drift exceeds tolerance in either
+    direction — costs that silently changed mean the dispatch pattern or
+    the cost model changed, and that must be acknowledged by a baseline
+    update."""
+    errors = []
+    for name, base in sorted(baseline.items()):
+        cur = results.get(name)
+        if cur is None:
+            continue  # absent workloads are the gate's concern, not ours
+        got_phases = cur.get("phases", {})
+        for phase, want in sorted(base.get("phases", {}).items()):
+            got = got_phases.get(phase)
+            if got is None:
+                errors.append(
+                    f"{name}: phase {phase!r} in baseline but absent "
+                    f"from this run — a phase stopped being recorded")
+                continue
+            if got > want * (1.0 + tolerance):
+                errors.append(
+                    f"{name}: phase {phase!r} regressed: p95 {got:.6f}s "
+                    f"vs baseline {want:.6f}s "
+                    f"(+{(got / want - 1.0):.0%}, tolerance "
+                    f"{tolerance:.0%}) — this phase moved")
+        got_cost = cur.get("cost", {})
+        for counter, want in sorted(base.get("cost", {}).items()):
+            got = got_cost.get(counter)
+            if got is None:
+                errors.append(
+                    f"{name}: cost counter {counter!r} in baseline but "
+                    f"absent from this run — cost recording broke")
+                continue
+            if want > 0 and abs(got / want - 1.0) > tolerance:
+                errors.append(
+                    f"{name}: cost counter {counter!r} moved: {got:g} vs "
+                    f"baseline {want:g} ({got / want - 1.0:+.0%}) — "
+                    f"dispatch pattern or cost model changed; update the "
+                    f"baseline if intentional")
+    return errors
 
 
 def check_metrics(results, metrics_dir):
@@ -89,6 +200,15 @@ def check_metrics(results, metrics_dir):
             elif not phases[ph].get("count", 0) > 0:
                 errors.append(f"{name}: phase histogram {ph!r} recorded "
                               f"zero observations in {mpath}")
+        counters = snap.get("engine", {}).get("counters", {})
+        for key in REQUIRED_COST_COUNTERS:
+            if key not in counters:
+                errors.append(f"{name}: cost counter {key!r} missing "
+                              f"from engine.counters in {mpath}")
+            elif not counters[key] > 0:
+                errors.append(f"{name}: cost counter {key!r} recorded "
+                              f"zero in {mpath} — dispatches were not "
+                              f"costed")
         for key in REQUIRED_SCHEDULER_KEYS:
             if key not in snap.get("scheduler", {}):
                 errors.append(f"{name}: scheduler gauge {key!r} missing "
@@ -109,6 +229,11 @@ def check_metrics(results, metrics_dir):
             errors.append(f"{name}: lifecycle trace is empty ({tpath}) — "
                           f"was the engine built with enable_metrics="
                           f"False?")
+        cpath = os.path.join(metrics_dir, f"chrome_trace_{name}.json")
+        if not os.path.exists(cpath):
+            errors.append(f"{name}: Chrome trace missing ({cpath})")
+        else:
+            errors += [f"{name}: {e}" for e in check_chrome_trace(cpath)]
     return errors
 
 
@@ -253,7 +378,16 @@ def main():
     ap.add_argument("--require-metrics", default=None, metavar="DIR",
                     help="validate the observability artifacts "
                          "(metrics_<workload>.json + trace_<workload>"
-                         ".jsonl) serve_bench exported into DIR")
+                         ".jsonl + chrome_trace_<workload>.json) "
+                         "serve_bench exported into DIR")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="serve_bench baseline JSON: attribute any "
+                         "per-phase p95 or cost-counter drift vs its "
+                         "'phases'/'cost' entries to the phase/counter "
+                         "that moved")
+    ap.add_argument("--baseline-tolerance", type=float, default=0.25,
+                    help="relative drift tolerated by --baseline "
+                         "attribution (fraction, default 0.25)")
     args = ap.parse_args()
     with open(args.report) as f:
         results = json.load(f)
@@ -262,13 +396,20 @@ def main():
                    args.allow_missing_speedup)
     if args.require_metrics:
         errors += check_metrics(results, args.require_metrics)
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        errors += attribute_regressions(results, baseline,
+                                        args.baseline_tolerance)
     for e in errors:
         print(f"BENCH CHECK FAILED: {e}", file=sys.stderr)
     if errors:
         sys.exit(1)
     print(f"bench checks passed for {sorted(results)}"
           + (f" (+ metrics artifacts in {args.require_metrics})"
-             if args.require_metrics else ""))
+             if args.require_metrics else "")
+          + (f" (+ phase/cost attribution vs {args.baseline})"
+             if args.baseline else ""))
 
 
 if __name__ == "__main__":

@@ -88,8 +88,20 @@ def main():
     print(f"scheduler: finished={m['scheduler']['finished']} "
           f"admitted={m['scheduler']['admitted']} "
           f"unadmitted={m['scheduler']['unadmitted']}")
-    print(format_report(eng.metrics_registry.snapshot(),
-                        title="step-phase timing"))
+    snap = eng.metrics_registry.snapshot()
+    print(format_report(snap, title="step-phase timing + dispatch costs"))
+    # analytical per-dispatch cost model: predicted HBM traffic of the
+    # packed weights vs what 8-bit dense would have streamed
+    cm = m["engine"]["cost_model"]
+    print(f"cost model: {cm['n_packed_leaves']}/{cm['n_gemm_leaves']} "
+          f"GEMMs packed, {cm['weight_bytes_per_dispatch'] / 2**20:.2f}"
+          f"MiB weight traffic/dispatch "
+          f"(8-bit dense: {cm['weight_bytes_dense8'] / 2**20:.2f}MiB); "
+          f"predicted total "
+          f"{snap['counters'].get('cost.hbm_bytes', 0) / 2**20:.1f}MiB "
+          f"moved at "
+          f"{snap['gauges'].get('cost.hbm_bytes_per_s', 0) / 2**20:.1f}"
+          f"MiB/s model-implied bandwidth")
     tsum = eng.tracer.summary()
     if tsum["ttft_s"]:
         print(f"ttft: p50={tsum['ttft_s']['p50'] * 1e3:.1f}ms "

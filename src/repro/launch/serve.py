@@ -9,9 +9,11 @@ prompt lengths only) — useful for A/B-ing the two hot paths.
 
 The continuous engine emits a periodic observability line every
 ``--metrics-every`` steps (queue depth, slot states, pool occupancy,
-p50/p95 step latency — all from ``engine.metrics()``), a full phase
-report at the end, and with ``--trace-out PATH`` exports the request
-lifecycle trace as JSONL (see docs/serving.md "Observability").
+p50/p95 step latency — all from ``engine.metrics()``), a full phase +
+cost report at the end, and with ``--trace-out PATH`` exports the trace:
+a ``.json`` path gets Chrome trace-event JSON (open in Perfetto —
+nested step/phase spans + per-request tracks), anything else the raw
+request-lifecycle JSONL (see docs/serving.md "Observability").
 """
 from __future__ import annotations
 
@@ -90,7 +92,8 @@ def main():
                     help="print a metrics line every N engine steps "
                          "(continuous engine; 0 disables)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
-                    help="export the request-lifecycle trace as JSONL")
+                    help="export the trace: *.json -> Chrome trace-event "
+                         "JSON (load in Perfetto), else lifecycle JSONL")
     args = ap.parse_args()
 
     cfg = C.get_smoke(args.arch) if args.smoke else C.get_config(args.arch)
@@ -145,9 +148,15 @@ def main():
         print(format_report(eng.metrics_registry.snapshot(),
                             title="serve metrics"), file=sys.stderr)
         if args.trace_out:
-            n = eng.tracer.export_jsonl(args.trace_out)
-            print(f"trace: {n} events -> {args.trace_out}",
-                  file=sys.stderr)
+            if args.trace_out.endswith(".json"):
+                n = eng.tracer.export_chrome_trace(args.trace_out)
+                print(f"trace: {n} Chrome trace events -> "
+                      f"{args.trace_out} (open at https://ui.perfetto.dev)",
+                      file=sys.stderr)
+            else:
+                n = eng.tracer.export_jsonl(args.trace_out)
+                print(f"trace: {n} events -> {args.trace_out}",
+                      file=sys.stderr)
 
     report = {"arch": cfg.name, "engine": args.engine,
               "requests": args.requests, "n_slots": args.n_slots,
@@ -161,6 +170,16 @@ def main():
         if stats.get("enabled"):
             report["prefix_hit_rate"] = round(stats["hit_rate"], 3)
             report["prefill_tokens_saved"] = stats["saved_tokens"]
+        snap = eng.metrics_registry.snapshot()
+        if "cost.hbm_bytes" in snap["counters"]:
+            # cost-model totals: predicted traffic of the issued
+            # dispatches, and the model-implied bandwidth over the run
+            report["cost_hbm_mib"] = round(
+                snap["counters"]["cost.hbm_bytes"] / 2**20, 2)
+            report["cost_gflops"] = round(
+                snap["counters"]["cost.flops"] / 1e9, 3)
+            report["cost_hbm_bytes_per_s"] = round(
+                snap["gauges"].get("cost.hbm_bytes_per_s", 0.0), 1)
         tsum = eng.tracer.summary()
         if tsum["ttft_s"]:
             report["ttft_p50_s"] = round(tsum["ttft_s"]["p50"], 5)

@@ -1,14 +1,17 @@
 from repro.serve.config import EngineConfig, SamplingParams
+from repro.serve.costmodel import CostModel, DispatchCost
 from repro.serve.engine import ContinuousBatchingEngine, DecodeEngine
 from repro.serve.kv_cache import SlotKVCache
 from repro.serve.metrics import MetricsRegistry, format_report
 from repro.serve.prefix_cache import BlockPool, RadixPrefixCache
 from repro.serve.quantized import pack_tree, packed_stats
 from repro.serve.scheduler import RequestScheduler
-from repro.serve.trace import RequestTracer, TraceWriter, read_jsonl
+from repro.serve.trace import (RequestTracer, TraceWriter,
+                               export_chrome_trace, read_jsonl)
 
-__all__ = ["BlockPool", "ContinuousBatchingEngine", "DecodeEngine",
-           "EngineConfig", "MetricsRegistry", "RadixPrefixCache",
-           "RequestScheduler", "RequestTracer", "SamplingParams",
-           "SlotKVCache", "TraceWriter", "format_report", "pack_tree",
+__all__ = ["BlockPool", "ContinuousBatchingEngine", "CostModel",
+           "DecodeEngine", "DispatchCost", "EngineConfig",
+           "MetricsRegistry", "RadixPrefixCache", "RequestScheduler",
+           "RequestTracer", "SamplingParams", "SlotKVCache", "TraceWriter",
+           "export_chrome_trace", "format_report", "pack_tree",
            "packed_stats", "read_jsonl"]

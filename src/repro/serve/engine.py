@@ -36,12 +36,18 @@ from repro.models import params as pp
 from repro.models.model import Model
 from repro.serve import trace as tr
 from repro.serve.config import EngineConfig, SamplingParams
+from repro.serve.costmodel import CostModel
 from repro.serve.kv_cache import SlotKVCache
-from repro.serve.metrics import MetricsRegistry
+from repro.serve.metrics import MetricsRegistry, cost_buckets
 from repro.serve.prefix_cache import BlockPool, RadixPrefixCache
 from repro.serve.quantized import pack_tree, total_slices
 from repro.serve.scheduler import Finished, RequestScheduler
 from repro.serve.trace import RequestTracer
+
+# shared bucket edges for per-dispatch cost histograms (the registry
+# only consults edges when a histogram is first created)
+_COST_EDGES = cost_buckets()
+_COST_FIELDS = ("flops", "hbm_bytes", "swis_cycles")
 
 
 @jax.jit
@@ -248,6 +254,13 @@ class ContinuousBatchingEngine:
                 "pallas" if jax.default_backend() == "tpu" else "xla")
         else:
             self.paged_impl = None
+        # analytical per-dispatch cost model (costmodel.py): every model
+        # launch records predicted FLOPs / HBM bytes / SWIS shift-pass
+        # cycles as cost.* counters + per-kind histograms. Built from the
+        # live (possibly packed) params, so packed GEMMs are costed at
+        # their bit-plane footprint.
+        self.cost_model = CostModel.for_engine(self)
+        self._step_no = 0
         self._prefill_flat = jax.jit(self.model.prefill_bucketed)
         self._prefill_sfx = jax.jit(self.model.prefill_chunk)
         self._decode = jax.jit(
@@ -371,9 +384,10 @@ class ContinuousBatchingEngine:
         counts forward launches (the fused win the dispatch-count test and
         the mixed_load bench gate measure)."""
         m = self.metrics_registry
-        with m.timer("step.total_s"):
+        self.tracer.current_step = self._step_no
+        with self._phase("step.total_s", "step"):
             if len(self._prefill_groups) < self.prefill_backlog:
-                with m.timer("step.admit_s"):
+                with self._phase("step.admit_s", "admit"):
                     admitted = self.scheduler.admit()
                 if admitted:
                     for slot, st in admitted:
@@ -386,7 +400,8 @@ class ContinuousBatchingEngine:
                     self._mixed_once()
                     decoded = True
                 else:
-                    with m.timer("step.chunk_advance_s"):
+                    with self._phase("step.chunk_advance_s",
+                                     "chunk_advance"):
                         self._advance_chunk()
             if not decoded and self.scheduler.needs_decode():
                 if self.spec_decode:
@@ -397,6 +412,16 @@ class ContinuousBatchingEngine:
         for f in finished:
             self.tracer.event(tr.FINISH, f.rid, n_tokens=len(f.tokens))
         m.counter("step.count").inc()
+        self._step_no += 1
+        if m.enabled:
+            # model-vs-measured utilization: bytes the cost model says the
+            # issued dispatches should have moved, over measured step time
+            total = m.histogram("step.total_s").total
+            if total > 0.0:
+                m.gauge("cost.hbm_bytes_per_s").set(
+                    m.counter("cost.hbm_bytes").value / total)
+                m.gauge("cost.flops_per_s").set(
+                    m.counter("cost.flops").value / total)
         return finished
 
     def drain(self) -> Dict[int, np.ndarray]:
@@ -461,8 +486,34 @@ class ContinuousBatchingEngine:
         # counters: fresh lifecycle data, zeroed phase timers
         self.metrics_registry.reset()
         self.tracer.reset()
+        self._step_no = 0
 
     # -- observability ---------------------------------------------------
+
+    def _phase(self, hist: str, span: str):
+        """Phase timing context: one clock-pair feeds the ``hist``
+        histogram AND (tracer enabled) a named span in the trace ring —
+        the span nests under the enclosing ``step`` span by timestamp
+        containment in the Chrome trace export."""
+        if self.tracer.enabled:
+            return self.tracer.span_timer(
+                span, self.metrics_registry.histogram(hist))
+        return self.metrics_registry.timer(hist)
+
+    def _record_cost(self, cost) -> None:
+        """Record one dispatch's predicted cost: global + per-kind
+        ``cost.*`` counters, per-kind per-dispatch histograms."""
+        m = self.metrics_registry
+        if not m.enabled:
+            return
+        for field in _COST_FIELDS:
+            v = getattr(cost, field)
+            m.counter(f"cost.{field}").inc(v)
+            m.counter(f"cost.{cost.kind}.{field}").inc(v)
+            m.histogram(f"cost.{cost.kind}.{field}",
+                        _COST_EDGES).observe(v)
+        if cost.gathered_bytes:
+            m.counter("cost.gathered_bytes").inc(cost.gathered_bytes)
 
     def metrics(self) -> Dict[str, Any]:
         """One unified observability snapshot: engine phase timers and
@@ -478,12 +529,15 @@ class ContinuousBatchingEngine:
                        "chunk_backlog_depth": len(self._prefill_groups),
                        "phases": snap["histograms"],
                        "counters": snap["counters"],
-                       "gauges": snap["gauges"]},
+                       "gauges": snap["gauges"],
+                       "cost_model": self.cost_model.summary()},
             "scheduler": self.scheduler.gauges(),
             "prefix_cache": self._prefix_cache_section(),
             "trace": {"events": len(self.tracer),
                       "dropped": self.tracer.dropped,
-                      "capacity": self.tracer.capacity},
+                      "capacity": self.tracer.capacity,
+                      "spans": len(self.tracer.spans()),
+                      "dropped_spans": self.tracer.dropped_spans},
         }
         if self.prefix_cache is not None:
             out["block_pool"] = self.prefix_cache.pool.occupancy()
@@ -612,15 +666,14 @@ class ContinuousBatchingEngine:
         # share a batch): one batched prefill per group keeps the jit
         # shapes bounded and makes lockstep admission numerically identical
         # to a static-batch prefill.
-        m = self.metrics_registry
         if self.prefix_cache is not None:
-            with m.timer("step.prefix_match_s"):
+            with self._phase("step.prefix_match_s", "prefix_match"):
                 admitted = self._assign_blocks(admitted)
             if self.prefill_chunk is not None:
-                with m.timer("step.chunk_advance_s"):
+                with self._phase("step.chunk_advance_s", "chunk_advance"):
                     self._stage_chunked(admitted)
                 return
-        with m.timer("step.prefill_dispatch_s"):
+        with self._phase("step.prefill_dispatch_s", "prefill_dispatch"):
             self._run_prefill(admitted)
 
     def _run_prefill(self, admitted) -> None:
@@ -652,6 +705,7 @@ class ContinuousBatchingEngine:
             last_idx = jnp.asarray(lasts)
             self._stat_prefill_tokens += int(lasts.sum()) + g
             self.metrics_registry.counter("step.model_dispatches").inc()
+            self._record_cost(self.cost_model.prefill(g, s_pad))
             if self.prefix_cache is not None:
                 meta = [self._slot_meta[slot] for slot, _ in group]
                 cache = self.cache.prefix_tree(
@@ -752,6 +806,7 @@ class ContinuousBatchingEngine:
                 length = min(self.cache.eff_len, max(length, bs))
                 grp["tree"] = self.cache.prefix_tree(
                     [m["matched"] for m in metas], p_len, length=length)
+                grp["tree_len"] = length  # chunk cost: attended positions
             self._prefill_groups.append(grp)
 
     def _advance_chunk(self) -> None:
@@ -780,6 +835,8 @@ class ContinuousBatchingEngine:
         committed = grp["p_len"] + lo
         self._stat_chunk_steps += 1
         self.metrics_registry.counter("step.model_dispatches").inc()
+        self._record_cost(self.cost_model.chunk(g, s_chunk,
+                                                grp["tree_len"]))
         if committed == 0:
             # first chunk of an uncached prompt: nothing committed, the
             # chunk attends over its own K/V like a whole-prompt prefill
@@ -867,21 +924,22 @@ class ContinuousBatchingEngine:
         tables = np.concatenate([self.cache.block_tables, grp["tables"]])
         self._stat_chunk_steps += 1
         m.counter("step.model_dispatches").inc()
-        with m.timer("step.mixed_dispatch_s"):
+        self._record_cost(self.cost_model.mixed(n + g, s_chunk))
+        with self._phase("step.mixed_dispatch_s", "mixed_dispatch"):
             logits, tree = self._mixed(
                 self.params, {"tokens": jnp.asarray(btoks)},
                 self.cache.tree, jnp.asarray(start), jnp.asarray(q_lens),
                 jnp.asarray(last_idx), jnp.asarray(tables))
             self.cache.tree = tree
         if m.enabled:
-            with m.timer("step.device_sync_s"):
+            with self._phase("step.device_sync_s", "device_sync"):
                 jax.block_until_ready(logits)
         all_keys = list(keys) + [st.req.key for _, st in grp["members"]]
         all_steps = np.concatenate([steps, np.zeros(g, np.int32)])
         all_temps = np.concatenate(
             [temps, np.asarray([st.req.temperature
                                 for _, st in grp["members"]], np.float32)])
-        with m.timer("step.sample_host_s"):
+        with self._phase("step.sample_host_s", "sample_host"):
             nxt = np.asarray(sample_step(
                 logits, jnp.stack(all_keys), jnp.asarray(all_steps),
                 jnp.asarray(all_temps)))
@@ -914,7 +972,8 @@ class ContinuousBatchingEngine:
                 for s in self.scheduler.decoding_slots()] \
             if self.tracer.enabled else []
         m.counter("step.model_dispatches").inc()
-        with m.timer("step.decode_dispatch_s"):
+        self._record_cost(self.cost_model.decode(self.n_slots))
+        with self._phase("step.decode_dispatch_s", "decode_dispatch"):
             if self.prefix_cache is not None:
                 logits, tree = self._decode(
                     self.params, jnp.asarray(toks)[:, None],
@@ -928,9 +987,9 @@ class ContinuousBatchingEngine:
         if m.enabled:
             # split device wait from host-side sampling: logits are about
             # to be consumed either way, so the sync is not extra work
-            with m.timer("step.device_sync_s"):
+            with self._phase("step.device_sync_s", "device_sync"):
                 jax.block_until_ready(logits)
-        with m.timer("step.sample_host_s"):
+        with self._phase("step.sample_host_s", "sample_host"):
             nxt = sample_step(logits, jnp.stack(keys), jnp.asarray(steps),
                               jnp.asarray(temps))
             self.scheduler.record_decode(np.asarray(nxt))
@@ -982,10 +1041,12 @@ class ContinuousBatchingEngine:
         draft_toks = np.zeros((n, k_max), np.int32)
         cur = toks
         m.counter("spec.steps").inc()
-        with m.timer("spec.draft_s"):
+        with self._phase("spec.draft_s", "spec_draft"):
             for j in range(k_max):
                 q1 = (k_rows > j).astype(np.int32)
                 m.counter("step.model_dispatches").inc()
+                self._record_cost(self.cost_model.draft(
+                    n, keep_slices=self.config.draft_slices))
                 logits, tree = self._draft(
                     self.params, {"tokens": jnp.asarray(cur)[:, None]},
                     self.cache.tree, jnp.asarray(idxs + j),
@@ -1004,16 +1065,17 @@ class ContinuousBatchingEngine:
         for s in decoding:
             q_lens[s] = k_rows[s] + 1
         m.counter("step.model_dispatches").inc()
-        with m.timer("spec.verify_s"):
+        self._record_cost(self.cost_model.verify(n, s_v))
+        with self._phase("spec.verify_s", "spec_verify"):
             logits, tree = self._verify(
                 self.params, {"tokens": jnp.asarray(btoks)},
                 self.cache.tree, jnp.asarray(idxs), jnp.asarray(q_lens),
                 tables)
             self.cache.tree = tree
         if m.enabled:
-            with m.timer("step.device_sync_s"):
+            with self._phase("step.device_sync_s", "device_sync"):
                 jax.block_until_ready(logits)
-        with m.timer("step.sample_host_s"):
+        with self._phase("step.sample_host_s", "sample_host"):
             # one flattened sample over all (row, position) pairs: entry
             # (r, j) draws with (keys[r], steps[r] + j) — exactly the
             # (key, step) plain decode would use for that token index

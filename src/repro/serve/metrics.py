@@ -32,7 +32,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-# default histogram domain: 1us .. ~537s in 10 log-spaced buckets per
+# default histogram domain: 1us .. 1024s in 4 log-spaced buckets per
 # decade — wide enough for a device-sync phase and a whole bench pass
 _DEFAULT_LO = 1e-6
 _DEFAULT_HI = 1024.0
@@ -45,6 +45,13 @@ def log_buckets(lo: float = _DEFAULT_LO, hi: float = _DEFAULT_HI,
     """Fixed log-spaced bucket upper edges covering [lo, hi]."""
     n = int(math.ceil(math.log10(hi / lo) * per_decade)) + 1
     return lo * np.power(10.0, np.arange(n) / per_decade)
+
+
+def cost_buckets() -> np.ndarray:
+    """Bucket edges for cost-model histograms (FLOPs / bytes / cycles per
+    dispatch): 1 .. 1e15 at 2 buckets per decade — coarse on purpose, the
+    raw-sample ring carries the exact percentiles at bench scale."""
+    return log_buckets(1.0, 1e15, per_decade=2)
 
 
 class Counter:
@@ -270,15 +277,29 @@ class _DisabledHistogram(Histogram):
 _DISABLED_HIST = _DisabledHistogram()
 
 
-def format_report(snapshot: Dict[str, Dict], title: str = "metrics",
-                  unit_scale: float = 1e3, unit: str = "ms") -> str:
+def _hist_unit(name: str):
+    """(scale, suffix, format) for a histogram by name convention:
+    ``*_s`` seconds → ms, ``*_bytes`` → MiB, anything else (FLOPs,
+    cycles) raw with a compact general format."""
+    if name.endswith("_s"):
+        return 1e3, "ms", ".3f"
+    if name.endswith("_bytes"):
+        return 1.0 / 2**20, "MiB", ".3f"
+    return 1.0, "", ".4g"
+
+
+def format_report(snapshot: Dict[str, Dict], title: str = "metrics") -> str:
     """Human-readable multi-line report of a ``snapshot()`` dict —
     used by ``launch/serve.py`` periodic reports and the quickstart
-    example. Histogram times are scaled to ``unit`` (default ms)."""
+    example. Each histogram is scaled by its name's unit convention
+    (``_s`` → ms, ``_bytes`` → MiB, else raw), so step-phase timings and
+    cost-model byte/FLOP/cycle histograms render side by side without
+    mislabeling."""
     lines: List[str] = [f"== {title} =="]
     if snapshot.get("counters"):
         lines.append("  counters: " + "  ".join(
-            f"{k}={v}" for k, v in sorted(snapshot["counters"].items())))
+            f"{k}={v:g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in sorted(snapshot["counters"].items())))
     if snapshot.get("gauges"):
         lines.append("  gauges:   " + "  ".join(
             f"{k}={v:g}" for k, v in sorted(snapshot["gauges"].items())))
@@ -286,8 +307,9 @@ def format_report(snapshot: Dict[str, Dict], title: str = "metrics",
         s = snapshot["histograms"][k]
         if not s["count"]:
             continue
+        scale, unit, fmt = _hist_unit(k)
         lines.append(
-            f"  {k}: n={s['count']} p50={s['p50'] * unit_scale:.3f}{unit} "
-            f"p95={s['p95'] * unit_scale:.3f}{unit} "
-            f"max={s['max'] * unit_scale:.3f}{unit}")
+            f"  {k}: n={s['count']} p50={s['p50'] * scale:{fmt}}{unit} "
+            f"p95={s['p95'] * scale:{fmt}}{unit} "
+            f"max={s['max'] * scale:{fmt}}{unit}")
     return "\n".join(lines)

@@ -52,6 +52,19 @@ KINDS = (SUBMIT, ADMIT, UNADMIT, PREFIX_HIT, PREFILL_CHUNK, FIRST_TOKEN,
 
 
 @dataclasses.dataclass
+class SpanEvent:
+    """One timed engine phase: a ``[ts, ts+dur)`` interval on the
+    engine's step timeline, tagged with the step number it ran under.
+    Spans live in their own bounded ring, separate from the request
+    lifecycle ring — a chatty phase cannot evict lifecycle events."""
+
+    name: str
+    ts: float  # monotonic seconds (perf_counter), span start
+    dur: float  # seconds
+    step: int = 0
+
+
+@dataclasses.dataclass
 class TraceEvent:
     kind: str
     rid: int
@@ -85,6 +98,11 @@ class RequestTracer:
         self.capacity = capacity
         self._ring: collections.deque = collections.deque(maxlen=capacity)
         self.dropped = 0
+        # step-phase spans: separate bounded ring so phase spam (ten+
+        # spans per step) can never evict request lifecycle events
+        self._spans: collections.deque = collections.deque(maxlen=capacity)
+        self.dropped_spans = 0
+        self.current_step = 0  # engine sets this at each step() entry
         # wall-clock anchor: ts_wall = ts + wall_offset
         self._wall_offset = time.time() - time.perf_counter()
 
@@ -99,9 +117,26 @@ class RequestTracer:
         self._ring.append(TraceEvent(
             kind, rid, time.perf_counter() if ts is None else ts, fields))
 
+    def span(self, name: str, ts: float, dur: float) -> None:
+        """Record one engine-phase span (monotonic start + duration)."""
+        if not self.enabled:
+            return
+        if len(self._spans) == self.capacity:
+            self.dropped_spans += 1
+        self._spans.append(SpanEvent(name, ts, dur, self.current_step))
+
+    def span_timer(self, name: str, hist=None) -> "_SpanTimer":
+        """``with tracer.span_timer("decode_dispatch", hist):`` — on exit
+        records a span AND observes the duration into ``hist`` (the
+        phase histogram), so one clock read feeds both sinks."""
+        return _SpanTimer(self, name, hist)
+
     def reset(self) -> None:
         self._ring.clear()
         self.dropped = 0
+        self._spans.clear()
+        self.dropped_spans = 0
+        self.current_step = 0
 
     # -- access ----------------------------------------------------------
 
@@ -112,6 +147,11 @@ class RequestTracer:
         if rid is None:
             return list(self._ring)
         return [e for e in self._ring if e.rid == rid]
+
+    def spans(self, name: Optional[str] = None) -> List[SpanEvent]:
+        if name is None:
+            return list(self._spans)
+        return [s for s in self._spans if s.name == name]
 
     @property
     def wall_offset(self) -> float:
@@ -183,6 +223,133 @@ class RequestTracer:
             for e in self._ring:
                 w.write(e)
         return len(self._ring)
+
+    def export_chrome_trace(self, path_or_file) -> int:
+        """Write Chrome trace-event JSON (loads in Perfetto / chrome://
+        tracing). Returns the number of trace events written. See
+        :func:`export_chrome_trace`."""
+        return export_chrome_trace(self, path_or_file)
+
+
+class _SpanTimer:
+    """Context manager: one ``perf_counter`` pair feeds both the phase
+    histogram (seconds observed) and the tracer's span ring."""
+
+    __slots__ = ("_tracer", "_name", "_hist", "_t0")
+
+    def __init__(self, tracer: RequestTracer, name: str, hist=None):
+        self._tracer = tracer
+        self._name = name
+        self._hist = hist
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dur = time.perf_counter() - self._t0
+        if self._hist is not None:
+            self._hist.observe(dur)
+        self._tracer.span(self._name, self._t0, dur)
+        return False
+
+
+def _us(ts: float, base: float) -> float:
+    """Monotonic seconds -> trace microseconds relative to ``base``."""
+    return round((ts - base) * 1e6, 3)
+
+
+# fixed pids for the exported trace: engine phases vs request lifecycles
+_PID_ENGINE = 1
+_PID_REQUESTS = 2
+
+
+def export_chrome_trace(tracer: RequestTracer, path_or_file) -> int:
+    """Export the tracer's spans + lifecycle events as Chrome
+    trace-event JSON (the format Perfetto and chrome://tracing load).
+
+    Layout (see docs/serving.md "Observability" for the how-to):
+
+    * **pid 1 "engine" / tid 0** — one ``X`` (complete) slice per
+      recorded span. Phase spans (``admit``, ``decode_dispatch``, ...)
+      nest under their enclosing ``step`` span by timestamp containment;
+      ``args.step`` carries the engine step number.
+    * **pid 2 "requests" / tid = rid** — per-request track: synthetic
+      ``queued`` / ``prefill`` / ``decode`` interval slices derived from
+      the lifecycle stream, every raw lifecycle event as an ``i``
+      instant (fields in ``args``), and ``s``/``t``/``f`` flow arrows
+      (id = rid) stitching the request's stages together so Perfetto
+      draws the hand-off across tracks.
+
+    Timestamps are microseconds relative to the earliest recorded event
+    (Chrome traces care about relative placement, not epoch).
+    """
+    spans = list(tracer._spans)
+    events = list(tracer._ring)
+    ts0 = min([s.ts for s in spans] + [e.ts for e in events],
+              default=0.0)
+
+    out: List[Dict[str, Any]] = [
+        {"ph": "M", "name": "process_name", "pid": _PID_ENGINE, "tid": 0,
+         "ts": 0, "args": {"name": "engine"}},
+        {"ph": "M", "name": "thread_name", "pid": _PID_ENGINE, "tid": 0,
+         "ts": 0, "args": {"name": "engine.step"}},
+        {"ph": "M", "name": "process_name", "pid": _PID_REQUESTS, "tid": 0,
+         "ts": 0, "args": {"name": "requests"}},
+    ]
+
+    for s in spans:
+        out.append({"ph": "X", "name": s.name, "cat": "phase",
+                    "pid": _PID_ENGINE, "tid": 0, "ts": _us(s.ts, ts0),
+                    "dur": round(s.dur * 1e6, 3),
+                    "args": {"step": s.step}})
+
+    by_rid: Dict[int, List[TraceEvent]] = {}
+    for e in events:
+        by_rid.setdefault(e.rid, []).append(e)
+
+    for rid, evs in sorted(by_rid.items()):
+        out.append({"ph": "M", "name": "thread_name", "pid": _PID_REQUESTS,
+                    "tid": rid, "ts": 0, "args": {"name": f"req {rid}"}})
+        first: Dict[str, float] = {}
+        for e in evs:
+            if e.kind not in first:
+                first[e.kind] = e.ts
+            out.append({"ph": "i", "name": e.kind, "cat": "lifecycle",
+                        "pid": _PID_REQUESTS, "tid": rid,
+                        "ts": _us(e.ts, ts0), "s": "t",
+                        "args": dict(e.fields)})
+        last_ts = evs[-1].ts
+        # synthetic stage slices: queued -> prefill -> decode
+        stages = []
+        if SUBMIT in first and ADMIT in first:
+            stages.append(("queued", first[SUBMIT], first[ADMIT]))
+        if ADMIT in first and FIRST_TOKEN in first:
+            stages.append(("prefill", first[ADMIT], first[FIRST_TOKEN]))
+        if FIRST_TOKEN in first:
+            end = first.get(FINISH, last_ts)
+            stages.append(("decode", first[FIRST_TOKEN], end))
+        for i, (name, t_lo, t_hi) in enumerate(stages):
+            out.append({"ph": "X", "name": name, "cat": "request",
+                        "pid": _PID_REQUESTS, "tid": rid,
+                        "ts": _us(t_lo, ts0),
+                        "dur": round(max(t_hi - t_lo, 0.0) * 1e6, 3),
+                        "args": {"rid": rid}})
+            # flow arrows thread the stages in lifecycle order
+            ph = "s" if i == 0 else ("f" if i == len(stages) - 1 else "t")
+            if len(stages) > 1:
+                out.append({"ph": ph, "name": f"req{rid}",
+                            "cat": "lifecycle", "id": rid,
+                            "pid": _PID_REQUESTS, "tid": rid,
+                            "ts": _us(t_lo, ts0)})
+
+    doc = {"traceEvents": out, "displayTimeUnit": "ms"}
+    if hasattr(path_or_file, "write"):
+        json.dump(doc, path_or_file)
+    else:
+        with open(path_or_file, "w") as f:
+            json.dump(doc, f)
+    return len(out)
 
 
 class TraceWriter:

@@ -1,0 +1,336 @@
+"""Cost-model validation: predictions pinned against ground truth.
+
+* gathered-bytes parity: the model's paged-decode gathered-K/V bytes
+  equal the bench's measured ``decode_gathered_bytes_per_step`` for the
+  gather / XLA-scan / Pallas paths — exactly, no tolerance;
+* packed weight traffic equals ``pack_tree``'s own storage accounting
+  (``packed_bits / 8``) — the §3.3 compression math appears once, used
+  twice, and must agree;
+* SWIS shift-pass cycles shrink strictly monotonically as
+  ``draft_slices`` truncates bit-planes (and hit the full-precision
+  count at ``keep_slices = n_shifts``);
+* every dispatch kind the engine issues records its ``cost.<kind>.*``
+  counters, and the utilization gauges are consistent with the recorded
+  totals;
+* the exported Chrome trace passes ``check_bench``'s schema smoke check
+  with nested step -> phase spans for a fused mixed-load run;
+* ``check_bench.attribute_regressions`` names the doctored phase and
+  cost counter, and only those.
+"""
+import functools
+import os
+import sys
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.core.swis import QuantConfig
+from repro.models import params as pp
+from repro.models.model import Model
+from repro.serve import (ContinuousBatchingEngine, EngineConfig,
+                         SamplingParams)
+from repro.serve.costmodel import GemmSpec, gemm_inventory
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks"))
+import check_bench  # noqa: E402
+import serve_bench  # noqa: E402
+
+MAX_LEN = 48
+BS = 8
+N_SHIFTS = 4
+
+
+@functools.cache
+def _setup():
+    cfg = C.get_smoke("smollm-135m").replace(compute_dtype="float32")
+    params = pp.init_params(Model(cfg).build(), jax.random.key(0))
+    return cfg, params
+
+
+def _engine(n_slots=2, **kw):
+    cfg, params = _setup()
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("block_size", BS)
+    return ContinuousBatchingEngine(
+        cfg, params, config=EngineConfig(max_len=MAX_LEN, n_slots=n_slots,
+                                         **kw))
+
+
+def _packed_engine(**kw):
+    qcfg = QuantConfig(method="swis", n_shifts=N_SHIFTS, group_size=4)
+    return _engine(packed=True, quant_cfg=qcfg, **kw)
+
+
+def _prompt(rng, n):
+    cfg, _ = _setup()
+    return rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+
+
+def _drive(eng, rng, n_req=3, prompt_len=10, tokens=5, stagger=0):
+    for i in range(n_req):
+        eng.submit(_prompt(rng, prompt_len + i),
+                   SamplingParams(max_tokens=tokens, seed=i))
+        for _ in range(stagger):
+            eng.step()
+    eng.drain()
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth parity
+# ---------------------------------------------------------------------------
+
+
+def test_gathered_bytes_matches_bench_measurement():
+    """Predicted gathered-K/V bytes per decode step == the bench's
+    measured ``decode_gathered_bytes_per_step``, for every paged
+    backend — the acceptance pin, exact equality."""
+    cfg, _ = _setup()
+    variants = [dict(),  # gather reference (paged_impl None)
+                dict(use_paged_kernel=True, paged_impl="xla"),
+                dict(use_paged_kernel=True, paged_impl="pallas_interpret")]
+    for kw in variants:
+        eng = _engine(**kw)
+        want = serve_bench._decode_gathered_bytes(eng, cfg)
+        got = eng.cost_model.decode(eng.n_slots).gathered_bytes
+        assert got == want, (kw, got, want)
+        # the gathered copy is part of (never exceeds) the HBM total
+        cost = eng.cost_model.decode(eng.n_slots)
+        assert cost.hbm_bytes >= cost.gathered_bytes
+        assert cost.hbm_bytes > 0 and cost.flops > 0
+
+
+def test_contiguous_cache_never_gathers():
+    eng = _engine(prefix_cache=False)
+    assert eng.cost_model.decode(eng.n_slots).gathered_bytes == 0.0
+
+
+def test_packed_weight_bytes_match_pack_tree_accounting():
+    """The cost model's per-dispatch packed weight traffic must equal
+    ``pack_tree``'s own stored-bits accounting: one compression formula,
+    two consumers, zero drift."""
+    eng = _packed_engine()
+    packed_specs = [sp for sp in eng.cost_model.specs if sp.packed]
+    assert len(packed_specs) == eng.pack_stats["n_packed"] > 0
+    got = sum(sp.weight_bytes() for sp in packed_specs)
+    want = eng.pack_stats["packed_bits"] / 8.0
+    assert abs(got - want) < 1e-6, (got, want)
+    # and the dense engine's GEMM inventory sees the same MAC count —
+    # packing changes bytes, never arithmetic
+    cfg, params = _setup()
+    dense_specs, _ = gemm_inventory(params)
+    assert (sum(sp.macs for sp in dense_specs)
+            == sum(sp.macs for sp in eng.cost_model.specs))
+
+
+def test_swis_cycles_strictly_monotone_in_draft_slices():
+    """Truncating bit-planes must strictly reduce predicted shift-pass
+    cycles, and keep_slices == n_shifts must equal full precision."""
+    eng = _packed_engine()
+    cm = eng.cost_model
+    cycles = [cm.draft(2, keep_slices=k).swis_cycles
+              for k in range(1, N_SHIFTS + 1)]
+    assert all(a < b for a, b in zip(cycles, cycles[1:])), cycles
+    assert cycles[-1] == cm.draft(2, keep_slices=None).swis_cycles
+    # HBM weight traffic shrinks with truncation too (fewer mask planes)
+    hbm = [cm.draft(2, keep_slices=k).hbm_bytes
+           for k in range(1, N_SHIFTS + 1)]
+    assert all(a < b for a, b in zip(hbm, hbm[1:])), hbm
+
+
+def test_gemm_spec_weight_bytes_honors_truncation():
+    sp = GemmSpec(k=64, c=32, packed=True, n_shifts=4, group_size=4)
+    full = sp.weight_bytes()
+    assert sp.weight_bytes(keep_slices=2) < full
+    # clamped: keep beyond n_shifts is full precision, floor at 1 slice
+    assert sp.weight_bytes(keep_slices=9) == full
+    assert sp.weight_bytes(keep_slices=0) == sp.weight_bytes(keep_slices=1)
+
+
+# ---------------------------------------------------------------------------
+# Engine wiring: every dispatch kind records its cost
+# ---------------------------------------------------------------------------
+
+
+def _counters(eng):
+    return eng.metrics_registry.snapshot()["counters"]
+
+
+def test_decode_and_prefill_kinds_recorded(rng):
+    eng = _engine()
+    _drive(eng, rng)
+    c = _counters(eng)
+    for kind in ("decode", "prefill"):
+        for field in ("flops", "hbm_bytes", "swis_cycles"):
+            assert c.get(f"cost.{kind}.{field}", 0) > 0, (kind, field)
+    # global totals are the sum of the per-kind totals
+    for field in ("flops", "hbm_bytes", "swis_cycles"):
+        per_kind = sum(v for k, v in c.items()
+                       if k.startswith("cost.") and k.endswith(f".{field}")
+                       and k.count(".") == 2)
+        assert abs(c[f"cost.{field}"] - per_kind) < 1e-6
+
+
+def test_chunk_and_mixed_kinds_recorded(rng):
+    sep = _engine(prefill_chunk=BS)
+    _drive(sep, rng, prompt_len=2 * BS + 3)
+    assert _counters(sep).get("cost.chunk.flops", 0) > 0
+    fused = _engine(prefill_chunk=BS, fused_step=True)
+    _drive(fused, rng, prompt_len=2 * BS + 3)
+    assert _counters(fused).get("cost.mixed.flops", 0) > 0
+
+
+def test_spec_kinds_recorded_and_draft_cheaper(rng):
+    eng = _packed_engine(spec_decode=True, spec_k=2, draft_slices=1)
+    _drive(eng, rng, tokens=8)
+    c = _counters(eng)
+    assert c.get("cost.draft.swis_cycles", 0) > 0
+    assert c.get("cost.verify.flops", 0) > 0
+    # a truncated S=1 draft launch costs fewer SWIS cycles than the
+    # full-precision k+1-position verify launch
+    cm = eng.cost_model
+    assert (cm.draft(eng.n_slots, keep_slices=1).swis_cycles
+            < cm.verify(eng.n_slots, 3).swis_cycles)
+
+
+def test_utilization_gauges_consistent(rng):
+    eng = _engine()
+    _drive(eng, rng)
+    snap = eng.metrics_registry.snapshot()
+    total = snap["histograms"]["step.total_s"]["sum"]
+    assert total > 0
+    want = snap["counters"]["cost.hbm_bytes"] / total
+    assert abs(snap["gauges"]["cost.hbm_bytes_per_s"] - want) < 1e-6
+    assert snap["gauges"]["cost.flops_per_s"] > 0
+
+
+def test_cost_model_summary_in_metrics(rng):
+    eng = _packed_engine()
+    cm = eng.metrics()["engine"]["cost_model"]
+    assert cm["n_packed_leaves"] == eng.pack_stats["n_packed"]
+    # N=4/group-4 SWIS stores exactly 8 bits/weight, so packed traffic
+    # can match but never exceed the 8-bit dense reference...
+    assert cm["weight_bytes_per_dispatch"] <= cm["weight_bytes_dense8"]
+    # ...and is far below what the unpacked fp32 engine streams
+    dense = _engine().metrics()["engine"]["cost_model"]
+    assert (cm["weight_bytes_per_dispatch"]
+            < dense["weight_bytes_per_dispatch"])
+    assert cm["gemm_flops_per_token"] > 0
+
+
+def test_costs_deterministic_across_reset(rng):
+    """Same traffic -> bit-identical cost counters after reset: the cost
+    layer is a pure function of the dispatch pattern."""
+    eng = _engine(prefill_chunk=BS, fused_step=True)
+    state = rng.bit_generator.state
+    _drive(eng, rng, prompt_len=2 * BS + 3)
+    first = {k: v for k, v in _counters(eng).items()
+             if k.startswith("cost.")}
+    assert first
+    eng.reset()
+    rng.bit_generator.state = state
+    _drive(eng, rng, prompt_len=2 * BS + 3)
+    second = {k: v for k, v in _counters(eng).items()
+              if k.startswith("cost.")}
+    assert first == second
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace schema + regression attribution (check_bench contracts)
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_passes_schema_check_for_mixed_run(rng, tmp_path):
+    """A fused mixed-load-style run exports a Chrome trace that passes
+    the CI schema smoke check and contains nested step -> mixed_dispatch
+    spans."""
+    eng = _engine(prefill_chunk=BS, fused_step=True, n_slots=2)
+    _drive(eng, rng, n_req=3, prompt_len=2 * BS + 3, tokens=6, stagger=1)
+    path = str(tmp_path / "chrome_trace_mixed_load.json")
+    eng.tracer.export_chrome_trace(path)
+    assert check_bench.check_chrome_trace(path) == []
+    import json
+    with open(path) as f:
+        events = json.load(f)["traceEvents"]
+    steps = [e for e in events if e["ph"] == "X" and e["name"] == "step"]
+    mixed = [e for e in events if e["ph"] == "X"
+             and e["name"] == "mixed_dispatch"]
+    assert steps and mixed
+    assert any(s["ts"] <= mx["ts"] and mx["ts"] + mx["dur"]
+               <= s["ts"] + s["dur"] + 1e-6
+               for mx in mixed for s in steps)
+
+
+def test_chrome_trace_schema_check_rejects_broken_trace(tmp_path):
+    p = str(tmp_path / "bad.json")
+    with open(p, "w") as f:
+        f.write("{not json")
+    assert check_bench.check_chrome_trace(p)
+    import json
+    with open(p, "w") as f:
+        json.dump({"traceEvents": [{"ph": "X", "ts": 0, "pid": 1,
+                                    "name": "admit", "dur": 1}]}, f)
+    errs = check_bench.check_chrome_trace(p)
+    assert errs and "no 'step' span" in errs[0]
+
+
+def test_attribution_names_the_doctored_phase_and_counter():
+    """An injected per-phase regression / cost drift is attributed to
+    exactly the phase and counter that moved."""
+    baseline = {"mixed_load": {
+        "tok_per_s": 100.0, "p95_step_s": 0.02,
+        "phases": {"step.total_s": 0.020, "step.mixed_dispatch_s": 0.010,
+                   "step.sample_host_s": 0.002},
+        "cost": {"cost.flops": 1e9, "cost.hbm_bytes": 1e8}}}
+    results = {"mixed_load": {
+        "phases": {"step.total_s": 0.021,          # within tolerance
+                   "step.mixed_dispatch_s": 0.050,  # doctored: 5x
+                   "step.sample_host_s": 0.002},
+        "cost": {"cost.flops": 2e9,                 # doctored: 2x
+                 "cost.hbm_bytes": 1.01e8}}}        # within tolerance
+    errs = check_bench.attribute_regressions(results, baseline,
+                                             tolerance=0.25)
+    assert len(errs) == 2, errs
+    assert any("step.mixed_dispatch_s" in e and "regressed" in e
+               for e in errs)
+    assert any("cost.flops" in e and "moved" in e for e in errs)
+    assert not any("step.total_s" in e or "cost.hbm_bytes" in e
+                   for e in errs)
+    # a clean run attributes nothing
+    assert check_bench.attribute_regressions(
+        {"mixed_load": baseline["mixed_load"]}, baseline, 0.25) == []
+
+
+def test_attribution_flags_missing_phase_and_counter():
+    baseline = {"w": {"phases": {"step.total_s": 0.01},
+                      "cost": {"cost.flops": 1e9}}}
+    errs = check_bench.attribute_regressions(
+        {"w": {"phases": {}, "cost": {}}}, baseline, 0.25)
+    assert len(errs) == 2
+    assert any("absent" in e and "step.total_s" in e for e in errs)
+    assert any("absent" in e and "cost.flops" in e for e in errs)
+
+
+def test_bench_report_carries_phases_and_cost(rng):
+    """serve_bench's per-pass report exposes the attribution surface:
+    p95 per phase histogram, global cost counters."""
+    cfg, params = _setup()
+    rep = serve_bench.run_workload(
+        "uniform", cfg, params, n_slots=2, requests=3, packed=False,
+        qcfg=None, block_size=BS, passes=1)
+    assert rep["phases"].get("step.total_s", 0) > 0
+    assert all(k.endswith("_s") for k in rep["phases"])
+    assert rep["cost"].get("cost.flops", 0) > 0
+    assert set(rep["cost"]) >= {"cost.flops", "cost.hbm_bytes",
+                                "cost.swis_cycles"}
+    # per-kind counters (dotted twice) stay out of the compact report
+    assert not any(k.count(".") > 1 for k in rep["cost"])
+
+
+def test_cost_model_memoizes_launch_shapes():
+    eng = _engine()
+    cm = eng.cost_model
+    a = cm.decode(2)
+    assert cm.decode(2) is a  # memoized, no per-step allocation
+    assert cm.decode(1) is not a

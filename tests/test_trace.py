@@ -169,6 +169,115 @@ def test_trace_ring_is_bounded(rng):
     assert eng.metrics()["trace"]["dropped"] == eng.tracer.dropped
 
 
+def test_trace_ring_overflow_drop_count_exact():
+    """`dropped` counts exactly the events pushed beyond capacity, and
+    the ring retains exactly the newest `capacity` events."""
+    t = tr.RequestTracer(capacity=4)
+    for i in range(11):
+        t.event(tr.DECODE_STEP, rid=0, step=i)
+    assert len(t) == 4 and t.dropped == 7
+    assert [e.fields["step"] for e in t.events()] == [7, 8, 9, 10]
+    t.reset()
+    assert len(t) == 0 and t.dropped == 0
+
+
+def test_trace_ring_overflow_degrades_gracefully():
+    """When a request's submit/admit events have been evicted, the
+    derived stats lose exactly the intervals that needed them — no crash,
+    no fabricated TTFT — and summary() still aggregates what remains."""
+    t = tr.RequestTracer(capacity=8)
+    t.event(tr.SUBMIT, rid=1, ts=0.0, prompt_len=4, n_tokens=6)
+    t.event(tr.ADMIT, rid=1, ts=1.0, slot=0)
+    t.event(tr.FIRST_TOKEN, rid=1, ts=2.0, slot=0)
+    # 8 more events evict submit/admit/first_token out of the ring
+    for j in range(7):
+        t.event(tr.DECODE_STEP, rid=1, ts=3.0 + j, slot=0, step=1 + j)
+    t.event(tr.FINISH, rid=1, ts=11.0, n_tokens=6)
+    assert t.dropped == 3
+    stats = t.request_stats(1)
+    assert "ttft_s" not in stats and "queue_wait_s" not in stats
+    assert "tpot_s" not in stats  # first_token evicted too
+    assert stats["n_decode_steps"] == 7
+    summ = t.summary()
+    assert summ["requests"] == 1 and summ["dropped"] == 3
+    assert summ["ttft_s"] == {} and summ["queue_wait_s"] == {}
+
+
+def test_span_ring_bounded_separately_from_lifecycle():
+    """Phase spans live in their own ring: span spam can never evict
+    lifecycle events, and span overflow is counted separately."""
+    t = tr.RequestTracer(capacity=4)
+    t.event(tr.SUBMIT, rid=7, ts=0.0)
+    for i in range(9):
+        t.span("decode_dispatch", ts=float(i), dur=0.5)
+    assert len(t) == 1 and t.dropped == 0  # lifecycle ring untouched
+    assert len(t.spans()) == 4 and t.dropped_spans == 5
+    assert [s.ts for s in t.spans()] == [5.0, 6.0, 7.0, 8.0]
+    t.reset()
+    assert t.spans() == [] and t.dropped_spans == 0
+
+
+def test_engine_spans_nest_under_step_and_reset_clears(rng):
+    eng = _engine()
+    eng.submit(_prompt(rng, 10), SamplingParams(max_tokens=5))
+    eng.drain()
+    steps = eng.tracer.spans("step")
+    assert steps and len(steps) == \
+        eng.metrics_registry.counter("step.count").value
+    # every non-step span falls inside some step span's interval, and
+    # carries the step number it ran under
+    for s in eng.tracer.spans():
+        if s.name == "step":
+            continue
+        assert any(p.ts <= s.ts and s.ts + s.dur <= p.ts + p.dur + 1e-9
+                   for p in steps), s.name
+    assert {s.name for s in eng.tracer.spans()} >= {
+        "step", "admit", "decode_dispatch", "sample_host"}
+    m = eng.metrics()
+    assert m["trace"]["spans"] == len(eng.tracer.spans())
+    eng.reset()
+    assert eng.tracer.spans() == [] and eng.tracer.dropped_spans == 0
+
+
+def test_disabled_tracer_records_no_spans(rng):
+    eng = _engine(enable_metrics=False)
+    eng.submit(_prompt(rng, 8), SamplingParams(max_tokens=4))
+    eng.drain()
+    assert eng.tracer.spans() == [] and len(eng.tracer) == 0
+
+
+def test_chrome_trace_export_schema(rng, tmp_path):
+    """Exported Chrome trace: every event carries ph/ts/pid, step spans
+    exist with phase spans nested inside, lifecycle instants and flow
+    arrows ride the request track."""
+    import json
+    eng = _engine()
+    rid = eng.submit(_prompt(rng, 10), SamplingParams(max_tokens=5))
+    eng.drain()
+    path = str(tmp_path / "trace.json")
+    n = eng.tracer.export_chrome_trace(path)
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    assert n == len(events) > 0
+    assert all(("ph" in e and "ts" in e and "pid" in e) for e in events)
+    xs = [e for e in events if e["ph"] == "X"]
+    steps = [e for e in xs if e["name"] == "step"]
+    assert steps
+    phases = [e for e in xs if e["pid"] == steps[0]["pid"]
+              and e["name"] != "step"]
+    assert any(s["ts"] <= p["ts"] and p["ts"] + p["dur"]
+               <= s["ts"] + s["dur"] + 1e-6
+               for p in phases for s in steps)
+    # request track: stage slices + instants + flow arrows for the rid
+    req = [e for e in events if e.get("tid") == rid and e["pid"] != 1]
+    assert {e["name"] for e in req if e["ph"] == "X"} >= {"prefill",
+                                                          "decode"}
+    assert any(e["ph"] == "i" and e["name"] == tr.SUBMIT for e in req)
+    flows = [e for e in events if e["ph"] in ("s", "t", "f")]
+    assert flows and all(e["id"] == rid for e in flows)
+
+
 # ---------------------------------------------------------------------------
 # engine.metrics() — the unified snapshot
 # ---------------------------------------------------------------------------
